@@ -1,0 +1,33 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
+from repro.fl.client import ClientData
+
+
+def make_clients(n_clients, alpha, n_samples, n_classes, size=10, seed=0):
+    ds = make_synthetic_images(n_samples, n_classes, size=size, seed=seed)
+    parts = dirichlet_partition(ds.y, n_clients, alpha, seed=seed)
+    datasets = []
+    for ix in parts:
+        tr, va, te = split_train_val_test(ix, seed=seed + 1)
+        datasets.append(ClientData(ds.x[tr], ds.y[tr], ds.x[va], ds.y[va],
+                                   ds.x[te], ds.y[te]))
+    return datasets, ds
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

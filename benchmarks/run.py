@@ -1,0 +1,178 @@
+"""Benchmark suite entry point: one function per paper table (+ kernel and
+roofline reports). Prints ``name,us_per_call,derived`` CSV rows.
+
+Full-scale variants live in benchmarks/table{1..4}_*.py; this runner uses
+reduced sizes so the whole suite finishes on one CPU core.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def bench_table1_accuracy():
+    """Table I (reduced): FedPAE vs local vs FedAvg vs one pFL baseline."""
+    from benchmarks.common import make_clients, row
+    from repro.core.fedpae import FedPAEConfig, run_fedpae, run_local_ensemble
+    from repro.core.nsga2 import NSGAConfig
+    from repro.fl.baselines import BASELINES, FLConfig
+
+    datasets, _ = make_clients(4, 0.1, 2400, 8, seed=0)
+    cfg = FedPAEConfig(families=("cnn4", "vgg", "resnet"), ensemble_k=3,
+                       nsga=NSGAConfig(pop_size=32, generations=20, k=3),
+                       max_epochs=10, patience=4, width=12)
+    fl = FLConfig(rounds=40, local_steps=2, families=cfg.families, width=12)
+    t0 = time.perf_counter()
+    local_acc, models, ccfg = run_local_ensemble(datasets, 8, cfg)
+    res = run_fedpae(datasets, 8, cfg, models=models, ccfg=ccfg)
+    t_fedpae = (time.perf_counter() - t0) * 1e6
+    accs = {"local": local_acc.mean(), "fedpae": res.test_acc.mean()}
+    for m in ("fedavg", "lg_fedavg"):
+        accs[m] = BASELINES[m](datasets, 8, fl).mean()
+    row("table1_accuracy", t_fedpae,
+        " ".join(f"{k}={v:.3f}" for k, v in accs.items()))
+    return local_acc, res
+
+
+def bench_table2_negative_transfer(local_acc, res):
+    """Table II (reduced): relative change range vs the local ensemble."""
+    from benchmarks.common import row
+    rel = (res.test_acc - local_acc) / np.maximum(local_acc, 1e-9)
+    row("table2_negative_transfer", 0.0,
+        f"fedpae_rel_range=({rel.min():+.1%};{rel.max():+.1%}) "
+        f"local_frac={res.local_frac.mean():.2f}")
+
+
+def bench_table3_scalability():
+    """Table III (reduced): doubled client count, same total data."""
+    from benchmarks.common import make_clients, row
+    from repro.core.fedpae import FedPAEConfig, run_fedpae, run_local_ensemble
+    from repro.core.nsga2 import NSGAConfig
+    datasets, _ = make_clients(8, 0.1, 2400, 8, seed=0)
+    cfg = FedPAEConfig(families=("cnn4", "vgg"), ensemble_k=3,
+                       nsga=NSGAConfig(pop_size=32, generations=15, k=3),
+                       max_epochs=8, patience=3, width=12)
+    t0 = time.perf_counter()
+    local_acc, models, ccfg = run_local_ensemble(datasets, 8, cfg)
+    res = run_fedpae(datasets, 8, cfg, models=models, ccfg=ccfg)
+    row("table3_scalability", (time.perf_counter() - t0) * 1e6,
+        f"clients=8 local={local_acc.mean():.3f} fedpae={res.test_acc.mean():.3f}")
+
+
+def bench_table4_cost():
+    """Table IV: analytic FLOPs comparison (full-scale config)."""
+    from benchmarks.common import row
+    from benchmarks.table4_cost import family_forward_flops
+    from repro.configs.paper_cnn import config as paper_config
+    from repro.models.cnn import CNNConfig
+    pc = paper_config(True)
+    fp = pc["fedpae"]
+    ccfg = CNNConfig(n_classes=10, width=fp.width)
+    f_avg = np.mean([family_forward_flops(f, ccfg) for f in fp.families])
+    N, M, T, D, V = 20, 5, fp.max_epochs, 2100, 450
+    P, G = fp.nsga.pop_size, fp.nsga.generations
+    f_fit = 2 * (N * M) ** 2 + 2 * N * M
+    fedpae = N * (M * 3 * f_avg * T * D + P * G * f_fit + 10 * V * f_avg)
+    rounds = N * 500 * 1 * 10 * 3 * f_avg
+    row("table4_cost", 0.0,
+        f"fedpae_gflops={fedpae/1e9:.1f} fedavg_gflops={rounds/1e9:.1f} "
+        f"ratio={rounds/max(fedpae,1):.2f}")
+
+
+def bench_nsga2_microbench():
+    """NSGA-II generation throughput (the paper's P x G hot loop)."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import row, timed
+    from repro.core.nsga2 import NSGAConfig, run_nsga2
+    from repro.core.objectives import population_objectives
+    M = 100
+    key = jax.random.PRNGKey(0)
+    acc = jax.random.uniform(key, (M,))
+    S = jax.random.uniform(key, (M, M))
+
+    def eval_fn(pop):
+        s, d = population_objectives(pop, acc, S)
+        return jnp.stack([s, d], axis=1)
+
+    cfg = NSGAConfig(pop_size=100, generations=100, k=5)
+
+    def run():
+        out = run_nsga2(eval_fn, M, cfg)
+        jax.block_until_ready(out["pop"])
+        return out
+
+    _, dt = timed(run, repeat=2)
+    row("nsga2_100x100", dt * 1e6, f"us_per_generation={dt*1e6/100:.0f}")
+
+
+def bench_ensemble_fitness_kernel():
+    """Pallas kernel (interpret) vs pure-jnp objectives."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import row, timed
+    from repro.kernels.ensemble_fitness.kernel import ensemble_fitness
+    from repro.kernels.ensemble_fitness.ref import ensemble_fitness_ref
+    P, M = 256, 128
+    key = jax.random.PRNGKey(0)
+    pop = (jax.random.uniform(key, (P, M)) < 0.3).astype(jnp.float32)
+    acc = jax.random.uniform(key, (M,))
+    S = jax.random.uniform(key, (M, M))
+    jref = jax.jit(ensemble_fitness_ref)
+    _, dt_ref = timed(lambda: jax.block_until_ready(jref(pop, acc, S)))
+    _, dt_ker = timed(lambda: jax.block_until_ready(
+        ensemble_fitness(pop, acc, S, interpret=True)))
+    row("ensemble_fitness_jnp", dt_ref * 1e6, f"P={P} M={M}")
+    row("ensemble_fitness_pallas_interpret", dt_ker * 1e6,
+        "CPU interpret mode; compiled path is TPU-only")
+
+
+def bench_partition_fig4():
+    """Fig 4: partition skew vs alpha."""
+    from benchmarks.common import row
+    from repro.data import dirichlet_partition
+    from repro.data.partition import partition_stats
+    labels = np.random.default_rng(0).integers(0, 10, 20000)
+    ents = {}
+    for alpha in (0.1, 0.3, 0.5):
+        parts = dirichlet_partition(labels, 20, alpha, seed=0)
+        c = partition_stats(labels, parts)["counts"]
+        p = c / np.maximum(c.sum(1, keepdims=True), 1)
+        ents[alpha] = float(-(p * np.log(p + 1e-12)).sum(1).mean())
+    row("fig4_partition_entropy", 0.0,
+        " ".join(f"alpha{a}={e:.2f}" for a, e in ents.items()))
+
+
+def bench_roofline_summary():
+    """Dry-run roofline: dominant bottleneck per (arch, shape), 16x16 mesh."""
+    from benchmarks.common import row
+    try:
+        from repro.roofline import analyze_all
+        rows = analyze_all(mesh="16x16")
+    except Exception as e:  # noqa: BLE001
+        row("roofline", 0.0, f"unavailable ({type(e).__name__})")
+        return
+    if not rows:
+        row("roofline", 0.0, "no dry-run results yet (run launch/dryrun.py)")
+        return
+    for r in rows:
+        row(f"roofline_{r['arch']}_{r['shape']}",
+            r["step_lower_bound_s"] * 1e6,
+            f"dominant={r['dominant']} useful={r['useful_ratio'] or 0:.2f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    local_acc, res = bench_table1_accuracy()
+    bench_table2_negative_transfer(local_acc, res)
+    bench_table3_scalability()
+    bench_table4_cost()
+    bench_nsga2_microbench()
+    bench_ensemble_fitness_kernel()
+    bench_partition_fig4()
+    bench_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table II: range of per-client relative accuracy change vs the
+local-ensemble baseline under the highest heterogeneity Dir(0.1).
+Reads results/table1.json (run table1 first) or runs a small fresh grid.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.table1_accuracy import METHODS, run_grid
+
+
+def negative_transfer(results):
+    out = {}
+    for key, r in results.items():
+        if "|0.1|" not in key:
+            continue
+        local = np.array(r["local"])
+        for m in METHODS:
+            if m == "local" or m not in r:
+                continue
+            rel = (np.array(r[m]) - local) / np.maximum(local, 1e-9)
+            lo, hi = out.get(m, (np.inf, -np.inf))
+            out[m] = (min(lo, rel.min()), max(hi, rel.max()))
+    return out
+
+
+def main():
+    path = "results/table1.json"
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+    else:
+        results = run_grid(alphas=(0.1,))
+    table = negative_transfer(results)
+    print("method,min_rel_change,max_rel_change")
+    for m, (lo, hi) in table.items():
+        print(f"{m},{lo:+.1%},{hi:+.1%}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

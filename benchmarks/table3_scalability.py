@@ -1,0 +1,47 @@
+"""Paper Table III: scalability — accuracy at an increased client count
+with the total data held constant (less data per client)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import make_clients
+from repro.configs.paper_cnn import config as paper_config
+from repro.core.fedpae import run_fedpae, run_local_ensemble
+from repro.fl.baselines import BASELINES, FLConfig
+
+
+def main(full=False, scale=2, out="results/table3.json"):
+    pc = paper_config(full)
+    n_clients = pc["n_clients"] * scale  # e.g. 20 -> 50-ish in the paper
+    n_classes = list(pc["datasets"].values())[0]
+    datasets, _ = make_clients(n_clients, 0.1, pc["n_samples"], n_classes, seed=0)
+    fl = FLConfig(rounds=400 if full else 60, local_steps=2,
+                  families=pc["fedpae"].families, width=pc["fedpae"].width)
+    results = {}
+    local_acc, models, ccfg = run_local_ensemble(datasets, n_classes, pc["fedpae"])
+    results["local"] = local_acc.tolist()
+    res = run_fedpae(datasets, n_classes, pc["fedpae"], models=models, ccfg=ccfg)
+    results["fedpae"] = res.test_acc.tolist()
+    for m in ("fedavg", "feddistill", "lg_fedavg", "fedkd", "fml", "fedgh"):
+        results[m] = BASELINES[m](datasets, n_classes, fl).tolist()
+    os.makedirs("results", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"clients={n_clients}")
+    print("method,mean_acc,std")
+    for m, a in results.items():
+        a = np.array(a)
+        print(f"{m},{a.mean():.3f},{a.std():.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scale", type=int, default=2)
+    a = ap.parse_args()
+    main(a.full, a.scale)

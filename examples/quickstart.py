@@ -1,0 +1,38 @@
+"""Quickstart: FedPAE on a 5-client non-IID network in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.fedpae import FedPAEConfig, run_fedpae, run_local_ensemble
+from repro.core.nsga2 import NSGAConfig
+from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
+from repro.fl.client import ClientData
+
+
+def main():
+    # 1. non-IID data: 5 clients, Dirichlet(0.1) label skew
+    ds = make_synthetic_images(3000, 10, size=10, seed=0)
+    parts = dirichlet_partition(ds.y, 5, alpha=0.1, seed=0)
+    datasets = []
+    for ix in parts:
+        tr, va, te = split_train_val_test(ix, seed=1)
+        datasets.append(ClientData(ds.x[tr], ds.y[tr], ds.x[va], ds.y[va],
+                                   ds.x[te], ds.y[te]))
+    print("client train sizes:", [len(d.x_tr) for d in datasets])
+
+    # 2. each client trains heterogeneous models; p2p exchange; NSGA-II select
+    cfg = FedPAEConfig(families=("cnn4", "vgg", "resnet"), ensemble_k=3,
+                       nsga=NSGAConfig(pop_size=48, generations=30, k=3),
+                       max_epochs=12, patience=4, width=12)
+    local_acc, models, ccfg = run_local_ensemble(datasets, 10, cfg)
+    res = run_fedpae(datasets, 10, cfg, models=models, ccfg=ccfg)
+
+    print(f"\nlocal-ensemble accuracy : {local_acc.mean():.3f}")
+    print(f"FedPAE accuracy         : {res.test_acc.mean():.3f}")
+    print(f"local models selected   : {res.local_frac.mean():.0%}")
+    print("per-client accs         :", np.round(res.test_acc, 3))
+
+
+if __name__ == "__main__":
+    main()

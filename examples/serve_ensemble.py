@@ -1,0 +1,53 @@
+"""FedPAE at LLM scale: serve a k-ensemble of heterogeneous language
+models with batched requests; compare single-model vs ensemble negative
+log-likelihood on held-out synthetic data.
+
+    PYTHONPATH=src python examples/serve_ensemble.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data import TokenPipeline
+from repro.launch.serve import serve_batch
+from repro.launch.train import train
+from repro.models import transformer as tf
+
+
+def nll(cfg, params, tokens, labels):
+    logits, _ = tf.forward(params, cfg, tokens, mode="train")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return float(-jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1)))
+
+
+def main():
+    arch = "llama3-8b"
+    # "clients" train the same family from different seeds/data shards
+    members = []
+    cfg = None
+    for seed in range(3):
+        params, losses, cfg = train(arch, "smoke", steps=60, batch=8, seq=64,
+                                    seed=seed, log_every=30)
+        members.append(params)
+    pipe = iter(TokenPipeline(cfg.vocab, 8, 64, seed=999))
+    hb = next(pipe)
+    toks, labs = jnp.asarray(hb["tokens"]), jnp.asarray(hb["labels"])
+    singles = [nll(cfg, p, toks, labs) for p in members]
+    # ensemble NLL via mean prob
+    probs = sum(jax.nn.softmax(tf.forward(p, cfg, toks, mode="train")[0]
+                               .astype(jnp.float32), -1) for p in members) / 3
+    ens = float(-jnp.mean(jnp.log(jnp.take_along_axis(probs, labs[..., None], -1)
+                                  + 1e-9)))
+    print(f"single-model NLLs: {np.round(singles, 4)}")
+    print(f"3-ensemble NLL   : {ens:.4f}")
+    assert ens <= min(singles) + 0.05, "ensemble should not be much worse"
+
+    # batched generation through the serving path
+    prompts = jnp.asarray(next(pipe)["tokens"][:4, :32])
+    out = serve_batch(cfg, members, prompts, gen_len=8)
+    print("ensemble generation:", np.asarray(out[0]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on synthetic token data, checkpoint it, reload, and verify
+the loss curve. (Use --preset 25m --steps 60 for a quick run.)
+
+    PYTHONPATH=src python examples/train_llm.py [--steps 200] [--preset 100m]
+"""
+import argparse
+
+import numpy as np
+
+from repro.checkpoint import load_pytree
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", default="100m")
+    ap.add_argument("--arch", default="llama3-8b")
+    a = ap.parse_args()
+    params, losses, cfg = train(a.arch, a.preset, steps=a.steps, batch=4,
+                                seq=256, ckpt_dir="results/ckpts")
+    first = float(np.mean(losses[:10]))
+    last = float(np.mean(losses[-10:]))
+    print(f"loss: first10={first:.3f} last10={last:.3f}")
+    assert last < first, "training did not reduce loss"
+    back, meta = load_pytree(f"results/ckpts/{a.arch}_{a.preset}_final.npz")
+    assert meta["steps"] == a.steps
+    print("checkpoint round-trip OK:", meta)
+
+
+if __name__ == "__main__":
+    main()

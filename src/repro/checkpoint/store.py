@@ -1,0 +1,111 @@
+"""Checkpointing: flat-key npz serialization of arbitrary pytrees +
+a per-client store that doubles as the p2p model-exchange medium
+(a client 'sends' a model by publishing the checkpoint; peers fetch it).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in sorted(node.items()):
+                rec(prefix + [str(k)], v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(prefix + [f"#{i}"], v)
+        elif node is None:
+            flat[_SEP.join(prefix) + _SEP + "@none"] = np.zeros((0,))
+        else:
+            arr = np.asarray(node)
+            if arr.dtype == jnp.bfloat16:  # npz can't store ml_dtypes
+                flat[_SEP.join(prefix) + _SEP + "@bf16"] = arr.view(np.uint16)
+            else:
+                flat[_SEP.join(prefix)] = arr
+    rec([], tree)
+    return flat
+
+
+def _unflatten(flat):
+    root = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        is_none = parts[-1] == "@none"
+        is_bf16 = parts[-1] == "@bf16"
+        if is_none or is_bf16:
+            parts = parts[:-1]
+        if is_bf16:
+            val = val.view(jnp.bfloat16)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = None if is_none else val
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if keys and all(re.fullmatch(r"#\d+", k) for k in keys):
+                return [fix(node[f"#{i}"]) for i in range(len(keys))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+    return fix(root)
+
+
+def save_pytree(path: str, tree, metadata: dict | None = None):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(jax.tree.map(np.asarray, tree))
+    if metadata is not None:
+        flat["@meta"] = np.frombuffer(json.dumps(metadata).encode(), np.uint8)
+    # atomic write: npz to temp then rename
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def load_pytree(path: str, as_jax: bool = True):
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = None
+    if "@meta" in flat:
+        meta = json.loads(flat.pop("@meta").tobytes().decode())
+    tree = _unflatten(flat)
+    if as_jax:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, meta
+
+
+class CheckpointStore:
+    """Directory-backed store; publish/fetch is the gossip medium."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def path(self, name: str) -> str:
+        return os.path.join(self.root, name + ".npz")
+
+    def publish(self, name: str, tree, metadata: dict | None = None):
+        save_pytree(self.path(name), tree, metadata)
+        return self.path(name)
+
+    def fetch(self, name: str):
+        return load_pytree(self.path(name))
+
+    def list(self):
+        return sorted(f[:-4] for f in os.listdir(self.root) if f.endswith(".npz"))
+
+    def exists(self, name: str) -> bool:
+        return os.path.exists(self.path(name))

@@ -1,0 +1,40 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get_config(name)` returns the exact assigned full-scale config;
+`get_smoke(name)` returns the reduced same-family variant used by the
+CPU smoke tests (<=4 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "zamba2-7b",
+    "rwkv6-3b",
+    "qwen2.5-3b",
+    "llama-3.2-vision-11b",
+    "arctic-480b",
+    "command-r-plus-104b",
+    "gemma2-27b",
+    "musicgen-medium",
+    "qwen3-moe-235b-a22b",
+    "llama3-8b",
+    "paper-cnn",  # the paper's own experimental scale (FedPAE on CNN bench)
+]
+
+
+def _mod(name: str):
+    return importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str):
+    return _mod(name).config()
+
+
+def get_smoke(name: str):
+    return _mod(name).smoke()
+
+
+def list_archs(include_paper: bool = False):
+    return [a for a in ARCHS if include_paper or a != "paper-cnn"]

@@ -1,0 +1,63 @@
+"""The model bench: every client's view of the network's models.
+
+Default exchange unit is the PREDICTION MATRIX on the receiving client's
+validation set (the paper's low-storage variant — §III-A), with lazy
+checkpoint fetch for selected members only. At LLM scale this is what
+moves over pod-to-pod DCN instead of multi-GB checkpoints (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BenchEntry:
+    model_id: int
+    owner: int
+    family: str
+    predict: Callable  # x -> (N, C) probabilities
+    n_params: int = 0
+
+
+@dataclasses.dataclass
+class ModelBench:
+    """Per-client repository of models (or their prediction matrices)."""
+    client: int
+    entries: list = dataclasses.field(default_factory=list)
+    _val_preds: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, entry: BenchEntry):
+        self.entries.append(entry)
+
+    @property
+    def owners(self) -> np.ndarray:
+        return np.array([e.owner for e in self.entries])
+
+    def is_local(self) -> np.ndarray:
+        return self.owners == self.client
+
+    def val_predictions(self, x_val: np.ndarray) -> np.ndarray:
+        """(M, V, C) — cached per model (the stored 'compact representation')."""
+        mats = []
+        for e in self.entries:
+            if e.model_id not in self._val_preds:
+                self._val_preds[e.model_id] = e.predict(x_val)
+            mats.append(self._val_preds[e.model_id])
+        return np.stack(mats)
+
+    def predictions(self, x: np.ndarray, mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """(M, N, C) on arbitrary data; with `mask`, only selected members
+        are evaluated (the 'download only what you need' path) and other
+        rows are zero."""
+        out = None
+        for i, e in enumerate(self.entries):
+            if mask is not None and not mask[i]:
+                continue
+            p = e.predict(x)
+            if out is None:
+                out = np.zeros((len(self.entries),) + p.shape, np.float32)
+            out[i] = p
+        return out

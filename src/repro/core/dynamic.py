@@ -1,0 +1,43 @@
+"""Dynamic (per-sample) ensemble selection — the paper's §VII future-work
+direction, implemented as a KNORA-style DES on top of the model bench:
+
+for each test sample, find its K nearest validation samples (input space),
+score every bench model by its accuracy on that neighbourhood, and vote
+with the top-k locally-competent models. Fully vectorized in JAX: one
+(T, V) distance matrix + one (T, M) neighbourhood-competence matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_competence(x_test, x_val, correct, K: int = 15):
+    """x_test: (T, ...), x_val: (V, ...), correct: (M, V) 0/1.
+    Returns (T, M) per-sample model competence (neighbourhood accuracy)."""
+    xt = x_test.reshape(x_test.shape[0], -1).astype(jnp.float32)
+    xv = x_val.reshape(x_val.shape[0], -1).astype(jnp.float32)
+    d2 = (jnp.sum(xt * xt, 1)[:, None] - 2 * xt @ xv.T
+          + jnp.sum(xv * xv, 1)[None, :])  # (T, V)
+    _, idx = jax.lax.top_k(-d2, K)  # (T, K) nearest val samples
+    # competence[t, m] = mean_k correct[m, idx[t, k]]
+    comp = jnp.mean(correct[:, idx], axis=-1)  # (M, T, K) -> mean -> (M, T)
+    return comp.T  # (T, M)
+
+
+def dynamic_ensemble_predict(probs_test, competence, k: int = 5):
+    """probs_test: (M, T, C); competence: (T, M). Per-sample top-k vote."""
+    M = probs_test.shape[0]
+    _, topm = jax.lax.top_k(competence, k)  # (T, k)
+    onehot = jax.nn.one_hot(topm, M, dtype=jnp.float32).sum(1)  # (T, M)
+    votes = jnp.einsum("tm,mtc->tc", onehot, probs_test.astype(jnp.float32)) / k
+    return jnp.argmax(votes, axis=-1)
+
+
+def des_accuracy(x_test, y_test, x_val, y_val, probs_val, probs_test,
+                 K: int = 15, k: int = 5):
+    """End-to-end dynamic selection accuracy for one client."""
+    correct = (jnp.argmax(probs_val, -1) == y_val[None, :]).astype(jnp.float32)
+    comp = knn_competence(x_test, x_val, correct, K)
+    pred = dynamic_ensemble_predict(probs_test, comp, k)
+    return jnp.mean((pred == y_test).astype(jnp.float32))

@@ -1,0 +1,143 @@
+"""NSGA-II (Deb et al. 2002), fully vectorized in JAX.
+
+The whole genetic loop is a single `lax.scan` over generations; every
+generation evaluates the entire population with two matmuls (see
+objectives.py), computes dominance (P x P boolean algebra), peels fronts
+with a `while_loop`, and applies tournament selection / uniform crossover
+/ bit-flip mutation / exact-k repair as vectorized bit ops. On TPU this
+turns the paper's per-client CPU hot loop into an MXU-shaped batch job.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(1e9)
+
+
+class NSGAConfig(NamedTuple):
+    pop_size: int = 100
+    generations: int = 100
+    k: int = 5            # exact ensemble size (0 = free size)
+    p_mut: float = 0.02
+    p_cross: float = 0.9
+    seed: int = 0
+
+
+def dominance(objs):
+    """objs: (P, n_obj), maximized. dom[i, j] = i dominates j."""
+    ge = jnp.all(objs[:, None, :] >= objs[None, :, :], axis=-1)
+    gt = jnp.any(objs[:, None, :] > objs[None, :, :], axis=-1)
+    return ge & gt
+
+
+def nondominated_rank(objs):
+    """(P,) rank per individual (0 = Pareto front) by iterative peeling."""
+    P = objs.shape[0]
+    dom = dominance(objs)  # (P, P)
+
+    def cond(state):
+        ranks, remaining, r = state
+        return jnp.any(remaining) & (r < P)
+
+    def body(state):
+        ranks, remaining, r = state
+        dominated = jnp.any(dom & remaining[:, None] & remaining[None, :], axis=0)
+        front = remaining & ~dominated
+        ranks = jnp.where(front, r, ranks)
+        return ranks, remaining & ~front, r + 1
+
+    ranks0 = jnp.full((P,), P, jnp.int32)
+    ranks, _, _ = jax.lax.while_loop(
+        cond, body, (ranks0, jnp.ones((P,), bool), jnp.int32(0)))
+    return ranks
+
+
+def crowding_distance(objs, ranks):
+    """(P,) crowding distance computed within each rank front."""
+    P, n_obj = objs.shape
+    dist = jnp.zeros((P,), jnp.float32)
+    for m in range(n_obj):
+        v = objs[:, m]
+        key = ranks.astype(jnp.float32) * BIG + v
+        order = jnp.argsort(key)  # sorted by (rank, value)
+        v_sorted = v[order]
+        r_sorted = ranks[order]
+        prev_ok = jnp.concatenate([jnp.array([False]), r_sorted[1:] == r_sorted[:-1]])
+        next_ok = jnp.concatenate([r_sorted[1:] == r_sorted[:-1], jnp.array([False])])
+        prev_v = jnp.concatenate([v_sorted[:1], v_sorted[:-1]])
+        next_v = jnp.concatenate([v_sorted[1:], v_sorted[-1:]])
+        span = jnp.maximum(jnp.max(v) - jnp.min(v), 1e-12)
+        contrib = jnp.where(prev_ok & next_ok, (next_v - prev_v) / span, BIG)
+        dist = dist.at[order].add(contrib)
+    return dist
+
+
+def _tournament(key, ranks, crowd, n):
+    """Binary tournament: lower rank wins, ties by higher crowding."""
+    P = ranks.shape[0]
+    idx = jax.random.randint(key, (2, n), 0, P)
+    a, b = idx[0], idx[1]
+    a_better = (ranks[a] < ranks[b]) | ((ranks[a] == ranks[b]) & (crowd[a] > crowd[b]))
+    return jnp.where(a_better, a, b)
+
+
+def repair_k(pop_f, key, k: int):
+    """Force exactly k ones per row: keep set bits with priority, fill the
+    rest randomly. pop_f: (P, M) float 0/1."""
+    P, M = pop_f.shape
+    noise = jax.random.uniform(key, (P, M))
+    score = pop_f * 2.0 + noise  # existing bits rank above absent ones
+    thresh = -jnp.sort(-score, axis=1)[:, k - 1:k]  # k-th largest
+    return (score >= thresh).astype(jnp.float32)
+
+
+def run_nsga2(eval_fn: Callable, n_models: int, cfg: NSGAConfig,
+              init_pop=None):
+    """eval_fn: (P, M) 0/1 float -> (P, n_obj) objectives (maximized).
+
+    Returns dict(pop, objs, ranks) of the final population. Entirely
+    jittable; the caller closes eval_fn over acc/S (objectives.py).
+    """
+    P, M, k = cfg.pop_size, n_models, cfg.k
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k0, k1 = jax.random.split(key, 3)
+    if init_pop is None:
+        pop = (jax.random.uniform(k0, (P, M)) < 0.5).astype(jnp.float32)
+    else:
+        pop = init_pop.astype(jnp.float32)
+    if k:
+        pop = repair_k(pop, k1, k)
+
+    def gen(carry, key_g):
+        pop = carry
+        objs = eval_fn(pop)
+        ranks = nondominated_rank(objs)
+        crowd = crowding_distance(objs, ranks)
+        ks = jax.random.split(key_g, 5)
+        parents_a = pop[_tournament(ks[0], ranks, crowd, P)]
+        parents_b = pop[_tournament(ks[1], ranks, crowd, P)]
+        cross = (jax.random.uniform(ks[2], (P, M)) < 0.5).astype(jnp.float32)
+        do_cross = (jax.random.uniform(ks[2], (P, 1)) < cfg.p_cross).astype(jnp.float32)
+        child = parents_a * (1 - cross * do_cross) + parents_b * cross * do_cross
+        flip = (jax.random.uniform(ks[3], (P, M)) < cfg.p_mut).astype(jnp.float32)
+        child = jnp.abs(child - flip)
+        if k:
+            child = repair_k(child, ks[4], k)
+        # elitist (mu + lambda) survival over combined 2P pool
+        allp = jnp.concatenate([pop, child], axis=0)
+        aobjs = eval_fn(allp)
+        aranks = nondominated_rank(aobjs)
+        acrowd = crowding_distance(aobjs, aranks)
+        order = jnp.argsort(aranks.astype(jnp.float32) * BIG - acrowd)
+        pop = allp[order[:P]]
+        return pop, None
+
+    keys = jax.random.split(key, cfg.generations)
+    pop, _ = jax.lax.scan(gen, pop, keys)
+    objs = eval_fn(pop)
+    ranks = nondominated_rank(objs)
+    return {"pop": pop, "objs": objs, "ranks": ranks}

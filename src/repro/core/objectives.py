@@ -1,0 +1,69 @@
+"""FedPAE ensemble objectives: strength and diversity.
+
+TPU-native recast (DESIGN.md §5): from the bench's prediction tensor
+`probs` (M models x V validation samples x C classes) we precompute
+  acc  in R^M      — per-model validation accuracy            (strength)
+  S    in R^{MxM}  — pairwise prediction-similarity Gram matrix (diversity)
+after which scoring a whole NSGA-II population C in {0,1}^{PxM} is two
+matmuls (see kernels/ensemble_fitness for the Pallas version):
+  strength(c)  = (C @ acc) / k
+  diversity(c) = 1 - (c^T S c - sum_i c_i S_ii) / (k (k-1))
+The pairwise similarity follows Pang et al. (2019): mean inner product of
+L2-normalised predicted-probability vectors (1 = identical predictions,
+0 = orthogonal), so `diversity` is the mean pairwise de-correlation among
+ensemble members.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def member_accuracy(probs, labels):
+    """probs: (M, V, C); labels: (V,) with -1 = padding -> (M,) accuracy."""
+    valid = labels >= 0
+    nv = jnp.maximum(jnp.sum(valid), 1)
+    pred = jnp.argmax(probs, axis=-1)
+    hit = (pred == labels[None, :]) & valid[None, :]
+    return jnp.sum(hit.astype(jnp.float32), axis=-1) / nv
+
+
+def similarity_matrix(probs, labels=None):
+    """probs: (M, V, C) -> (M, M) mean pairwise normalized inner product
+    over valid (non-padding) samples."""
+    p = probs.astype(jnp.float32)
+    p = p / (jnp.linalg.norm(p, axis=-1, keepdims=True) + 1e-12)
+    if labels is not None:
+        valid = (labels >= 0).astype(jnp.float32)
+        p = p * valid[None, :, None]
+        nv = jnp.maximum(jnp.sum(valid), 1.0)
+    else:
+        nv = probs.shape[1]
+    # S[i,j] = mean_v <p_i(v), p_j(v)>
+    return jnp.einsum("mvc,nvc->mn", p, p) / nv
+
+
+def population_objectives(pop, acc, S):
+    """pop: (P, M) 0/1 float; acc: (M,); S: (M, M).
+    Returns (strength (P,), diversity (P,)). Ensemble size k per row."""
+    pop = pop.astype(jnp.float32)
+    k = jnp.sum(pop, axis=1)  # (P,)
+    strength = (pop @ acc) / jnp.maximum(k, 1.0)
+    quad = jnp.einsum("pm,mn,pn->p", pop, S, pop)
+    self_sim = pop @ jnp.diag(S)
+    pairs = jnp.maximum(k * (k - 1.0), 1.0)
+    mean_sim = (quad - self_sim) / pairs
+    diversity = 1.0 - mean_sim
+    return strength, diversity
+
+
+def ensemble_accuracy(pop, probs, labels):
+    """Overall accuracy of each candidate ensemble (mean-prob vote).
+    pop: (P, M); probs: (M, V, C); labels: (V,) -1=pad -> (P,)."""
+    pop = pop.astype(jnp.float32)
+    valid = labels >= 0
+    nv = jnp.maximum(jnp.sum(valid), 1)
+    votes = jnp.einsum("pm,mvc->pvc", pop, probs.astype(jnp.float32))
+    pred = jnp.argmax(votes, axis=-1)  # (P, V)
+    hit = (pred == labels[None, :]) & valid[None, :]
+    return jnp.sum(hit.astype(jnp.float32), axis=-1) / nv

@@ -1,0 +1,60 @@
+"""Peer-adaptive ensemble selection (FedPAE §III-A):
+NSGA-II over (strength, diversity), then pick the Pareto-front member with
+the best OVERALL validation accuracy (mean-prob vote)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .nsga2 import NSGAConfig, run_nsga2
+from .objectives import (ensemble_accuracy, member_accuracy,
+                         population_objectives, similarity_matrix)
+
+
+@partial(jax.jit, static_argnames=("nsga", "use_kernel"))
+def select_ensemble(probs_val, labels_val, nsga: NSGAConfig, use_kernel: bool = False):
+    """probs_val: (M, V, C) bench predictions on the local validation set.
+
+    Returns dict with:
+      chromosome (M,) 0/1 — the selected ensemble,
+      pareto_pop/pareto_objs — the final Pareto front (Fig. 3),
+      val_accuracy — overall validation accuracy of the winner.
+    """
+    M = probs_val.shape[0]
+    acc = member_accuracy(probs_val, labels_val)
+    S = similarity_matrix(probs_val, labels_val)
+
+    if use_kernel:
+        from repro.kernels.ensemble_fitness import ops as ef_ops
+
+        def eval_fn(pop):
+            st, dv = ef_ops.ensemble_fitness(pop, acc, S)
+            return jnp.stack([st, dv], axis=1)
+    else:
+        def eval_fn(pop):
+            st, dv = population_objectives(pop, acc, S)
+            return jnp.stack([st, dv], axis=1)
+
+    out = run_nsga2(eval_fn, M, nsga)
+    pop, objs, ranks = out["pop"], out["objs"], out["ranks"]
+    pareto = ranks == 0
+    overall = ensemble_accuracy(pop, probs_val, labels_val)
+    score = jnp.where(pareto, overall, -1.0)
+    best = jnp.argmax(score)
+    return {
+        "chromosome": pop[best],
+        "val_accuracy": overall[best],
+        "member_acc": acc,
+        "pareto_mask": pareto,
+        "pop": pop,
+        "objs": objs,
+    }
+
+
+def local_only_chromosome(is_local, k: int):
+    """The all-local fallback ensemble (negative-transfer safety valve)."""
+    idx = jnp.argsort(~is_local)  # locals first
+    chrom = jnp.zeros(is_local.shape, jnp.float32)
+    return chrom.at[idx[:k]].set(1.0)

@@ -1,0 +1,38 @@
+"""Peer-to-peer network topologies for the decentralized exchange."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def full(n: int):
+    return [[j for j in range(n) if j != i] for i in range(n)]
+
+
+def ring(n: int, k: int = 1):
+    return [sorted({(i + d) % n for d in range(-k, k + 1)} - {i}) for i in range(n)]
+
+
+def random_regular(n: int, k: int, seed: int = 0):
+    """k-regular-ish random graph (symmetric, connected via ring backbone)."""
+    rng = np.random.default_rng(seed)
+    adj = {i: set() for i in range(n)}
+    for i in range(n):  # ring backbone guarantees connectivity
+        adj[i].add((i + 1) % n)
+        adj[(i + 1) % n].add(i)
+    while min(len(v) for v in adj.values()) < k:
+        i = min(adj, key=lambda x: len(adj[x]))
+        j = int(rng.integers(0, n))
+        if j != i:
+            adj[i].add(j)
+            adj[j].add(i)
+    return [sorted(adj[i]) for i in range(n)]
+
+
+def make_topology(name: str, n: int, k: int = 3, seed: int = 0):
+    if name == "full":
+        return full(n)
+    if name == "ring":
+        return ring(n, k=1)
+    if name == "random":
+        return random_regular(n, k, seed)
+    raise ValueError(name)

@@ -1,0 +1,12 @@
+"""Public jit'd wrapper for the ensemble_fitness kernel. On a CPU host
+the kernel runs in interpret mode; on TPU set interpret=False."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ensemble_fitness as _kernel_call
+
+
+def ensemble_fitness(pop, acc, S):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel_call(pop, acc, S, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the ensemble_fitness kernel (identical math to
+core/objectives.population_objectives)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ensemble_fitness_ref(pop, acc, S):
+    """pop: (P, M) 0/1 float32; acc: (M,); S: (M, M).
+    Returns (strength (P,), diversity (P,))."""
+    pop = pop.astype(jnp.float32)
+    k = jnp.sum(pop, axis=1)
+    strength = (pop @ acc) / jnp.maximum(k, 1.0)
+    quad = jnp.sum((pop @ S) * pop, axis=1)
+    self_sim = pop @ jnp.diag(S)
+    pairs = jnp.maximum(k * (k - 1.0), 1.0)
+    diversity = 1.0 - (quad - self_sim) / pairs
+    return strength, diversity

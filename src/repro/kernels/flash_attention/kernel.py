@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (online softmax), with causal + sliding
+window masks, logit softcap, and GQA via BlockSpec index mapping (kv head
+= q head // G — no repeat materialization in HBM).
+
+Grid: (B*H, nQ, nK); the kv axis is innermost/sequential ('arbitrary')
+so the (m, l, acc) running statistics live in VMEM scratch across kv
+steps. Block shapes default to (128, 128) — MXU-aligned; the full working
+set per step is q(128,hd) + k/v(128,hd) + acc(128,hd), comfortably
+inside the ~16 MB v5e VMEM for hd <= 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, softcap, sq, sk, block_q, block_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (sk - sq)  # align sequence ends
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked kv blocks (beyond causal horizon / before window)
+    first_q = qi * block_q + (sk - sq)
+    last_q = first_q + block_q - 1
+    needed = True
+    if causal:
+        needed = (ki * block_k) <= last_q
+    if window:
+        needed = needed & ((ki + 1) * block_k - 1 >= first_q - (window - 1))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        ok = k_pos < sk
+        if causal:
+            ok &= k_pos <= q_pos
+        if window:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=BLOCK_Q, block_k=BLOCK_K, interpret=True):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    Sqp, Skp = qp.shape[2], kp.shape[2]
+    grid = (B * H, Sqp // block_q, Skp // block_k)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        sq=Sq, sk=Sk, block_q=block_q, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq]

@@ -1,0 +1,19 @@
+"""jit'd public wrapper: model layout (B, S, H, hd) in/out, TPU kernel on
+TPU, interpret mode elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _kernel_call
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    interpret = jax.default_backend() != "tpu"
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _kernel_call(qt, kt, vt, causal=causal, window=window,
+                       softcap=softcap, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+TPU adaptation of the GPU warp-scan: the sequence is processed in chunks
+of Q tokens; each grid step does the intra-chunk quadratic-in-Q work as
+MXU matmuls and carries the (hd, ds) state in VMEM scratch across the
+sequential chunk axis.
+
+Grid: (Bb * nh, n_chunks)   — chunk axis innermost/sequential.
+Blocks: x (Q, hd), dt (Q,), B/C (Q, ds) resident in VMEM; state scratch
+(hd, ds) fp32. For hd=ds=64, Q=128 everything is 128-aligned and < 1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _kernel(alog_ref, d_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_out_ref,
+            h_ref, *, nh):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+    bh = pl.program_id(0)
+    h_idx = jax.lax.rem(bh, nh)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)    # (Q,)
+    B = b_ref[0].astype(jnp.float32)      # (Q, ds)
+    C = c_ref[0].astype(jnp.float32)      # (Q, ds)
+    A = -jnp.exp(alog_ref[h_idx])         # scalar
+    Dh = d_ref[h_idx]
+
+    a = dt * A                             # (Q,) log decay, <= 0
+    cum = jnp.cumsum(a)                    # (Q,)
+    Q = x.shape[0]
+    # intra-chunk: scores[i,j] = (C_i.B_j) exp(cum_i - cum_j) dt_j,  j <= i
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    li = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(ii >= jj, li, -jnp.inf))
+    scores = CB * L * dt[None, :]
+    y = jax.lax.dot(scores, x, preferred_element_type=jnp.float32)  # (Q, hd)
+    # inter-chunk: y += exp(cum_i) * C_i . h_prev
+    h_prev = h_ref[...]                    # (hd, ds)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y += x * Dh
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: h = exp(cum_Q) h_prev + sum_j exp(cum_Q - cum_j) dt_j x_j B_j^T
+    wj = jnp.exp(cum[-1] - cum) * dt       # (Q,)
+    h_new = h_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        x * wj[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (hd, ds)
+    h_ref[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        h_out_ref[0] = h_new.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A_log, B, C, D, *, chunk=CHUNK, interpret=True):
+    """x: (Bb, S, nh, hd); dt: (Bb, S, nh); B, C: (Bb, S, ds).
+    Returns (y (Bb, S, nh, hd), h_final (Bb, nh, hd, ds))."""
+    Bb, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "pad sequence to a chunk multiple"
+    nc = S // Q
+    # reshape to (Bb*nh, nc, Q, ...) head-major layout
+    xh = x.transpose(0, 2, 1, 3).reshape(Bb * nh, S, hd)
+    dth = dt.transpose(0, 2, 1).reshape(Bb * nh, S)
+    Bh = jnp.repeat(B[:, None], nh, 1).reshape(Bb * nh, S, ds)
+    Ch = jnp.repeat(C[:, None], nh, 1).reshape(Bb * nh, S, ds)
+
+    grid = (Bb * nh, nc)
+    y, hT = pl.pallas_call(
+        functools.partial(_kernel, nh=nh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nh,), lambda bh, ci: (0,)),          # A_log
+            pl.BlockSpec((nh,), lambda bh, ci: (0,)),          # D
+            pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, Q, ds), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, ds), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+                   pl.BlockSpec((1, hd, ds), lambda bh, ci: (bh, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Bb * nh, S, hd), x.dtype),
+                   jax.ShapeDtypeStruct((Bb * nh, hd, ds), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(A_log.astype(jnp.float32), D.astype(jnp.float32), xh, dth, Bh, Ch)
+    y = y.reshape(Bb, nh, S, hd).transpose(0, 2, 1, 3)
+    hT = hT.reshape(Bb, nh, hd, ds)
+    return y, hT

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the ssd_scan kernel: pads the sequence to a
+chunk multiple, interpret mode off-TPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import CHUNK, ssd_scan as _kernel_call
+
+
+def ssd_scan(x, dt, A_log, B, C, D, chunk: int = CHUNK):
+    """x: (Bb, S, nh, hd); dt: (Bb, S, nh); B, C: (Bb, S, ds).
+    Returns (y (Bb, S, nh, hd), h_final)."""
+    interpret = jax.default_backend() != "tpu"
+    S = x.shape[1]
+    pad = (-S) % min(chunk, max(S, 1))
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, hT = _kernel_call(x, dt, A_log, B, C, D, chunk=chunk, interpret=interpret)
+    return y[:, :S], hT  # hT exact: padded steps have dt=0 => decay 1, no input

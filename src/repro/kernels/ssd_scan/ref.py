@@ -1,0 +1,36 @@
+"""Oracle for the ssd_scan kernel: the NAIVE sequential Mamba2 recurrence
+(deliberately different algorithm from both the chunked-jnp implementation
+in models/ssm.py and the Pallas kernel, so agreement is meaningful).
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = C_t . h_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A_log, B, C, D):
+    """x: (Bb, S, nh, hd); dt: (Bb, S, nh); B, C: (Bb, S, ds);
+    A_log, D: (nh,). Returns (y, h_final (Bb, nh, hd, ds))."""
+    Bb, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (Bb,nh,hd), (Bb,nh), (Bb,ds), (Bb,ds)
+        dec = jnp.exp(dtt * A[None, :])  # (Bb, nh)
+        h = h * dec[:, :, None, None] + \
+            (dtt[:, :, None] * xt)[..., None] * Bt[:, None, None, :]
+        y = jnp.einsum("bhds,bs->bhd", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, nh, hd, ds), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), hT

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: RWKV6 chunked WKV scan (per-channel data-dependent
+decay). Same chunking strategy as ssd_scan but the decay is a full (Q, hd)
+field, so the intra-chunk term is computed in log-decay space:
+
+  A[i,j] = sum_c (r_i[c] e^{cum_{i-1}[c]}) (k_j[c] e^{-cum_j[c]}),  j < i
+
+Grid: (B * nh, n_chunks), chunk axis sequential; state (K, V) = (hd, hd)
+fp32 lives in VMEM scratch. Chunk length 64 bounds e^{-cum} dynamic range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _kernel(u_ref, r_ref, k_ref, v_ref, w_ref, y_ref, s_out_ref, s_ref, *, nh):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+    bh = pl.program_id(0)
+    h_idx = jax.lax.rem(bh, nh)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)   # (Q, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = w_ref[0].astype(jnp.float32)  # (Q, hd) log decay, < 0
+    u = u_ref[h_idx].astype(jnp.float32)  # (hd,)
+    Q = r.shape[0]
+
+    cum = jnp.cumsum(lw, axis=0)       # (Q, hd)
+    cum_prev = cum - lw
+    r_dec = r * jnp.exp(cum_prev)
+    k_dec = k * jnp.exp(-cum)
+    A = jax.lax.dot_general(r_dec, k_dec, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    A = jnp.where(ii > jj, A, 0.0)
+    diag = jnp.sum(r * (u[None, :] * k), axis=1)  # (Q,)
+    y = jax.lax.dot(A, v, preferred_element_type=jnp.float32) + diag[:, None] * v
+    s_prev = s_ref[...]                # (K, V)
+    y += jax.lax.dot(r_dec, s_prev, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    kw = k * jnp.exp(cum[-1][None, :] - cum)  # (Q, hd)
+    s_new = s_prev * jnp.exp(cum[-1])[:, None] + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_scan(r, k, v, logw, u, *, chunk=CHUNK, interpret=True):
+    """r/k/v/logw: (B, S, nh, hd); u: (nh, hd) ->
+    (y (B, S, nh, hd), sT (B, nh, hd, hd))."""
+    B, S, nh, hd = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, "pad sequence to a chunk multiple"
+    nc = S // Q
+
+    def hm(a):  # head-major (B*nh, S, hd)
+        return a.transpose(0, 2, 1, 3).reshape(B * nh, S, hd)
+
+    grid = (B * nh, nc)
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, nh=nh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nh, hd), lambda bh, ci: (0, 0)),
+            pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, Q, hd), lambda bh, ci: (bh, ci, 0)),
+                   pl.BlockSpec((1, hd, hd), lambda bh, ci: (bh, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B * nh, S, hd), r.dtype),
+                   jax.ShapeDtypeStruct((B * nh, hd, hd), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(u.astype(jnp.float32), hm(r), hm(k), hm(v), hm(logw))
+    y = y.reshape(B, nh, S, hd).transpose(0, 2, 1, 3)
+    sT = sT.reshape(B, nh, hd, hd)
+    return y, sT

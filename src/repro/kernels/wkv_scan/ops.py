@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the wkv_scan kernel: pads the sequence to a
+chunk multiple, interpret mode off-TPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import CHUNK, wkv_scan as _kernel_call
+
+
+def wkv_scan(r, k, v, logw, u, chunk: int = CHUNK):
+    """r/k/v/logw: (B, S, nh, hd); u: (nh, hd). Returns (y, sT)."""
+    interpret = jax.default_backend() != "tpu"
+    S = r.shape[1]
+    pad = (-S) % min(chunk, max(S, 1))
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps: r=k=0 (no output/update), logw=0 (decay 1 => sT exact)
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    y, sT = _kernel_call(r, k, v, logw, u, chunk=chunk, interpret=interpret)
+    return y[:, :S], sT

@@ -1,0 +1,29 @@
+"""Oracle for the wkv_scan kernel: naive sequential RWKV6 recurrence.
+
+    y_t = S_t^T r_t + (r_t . (u*k_t)) v_t
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T      (per-channel decay w_t)
+Note S_t here is the state BEFORE absorbing token t (matches models/rwkv).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_scan_ref(r, k, v, logw, u, s0=None):
+    """r, k, v, logw: (B, S, nh, hd); u: (nh, hd).
+    Returns (y (B, S, nh, hd), sT (B, nh, hd, hd))."""
+    B, S, nh, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = [a.astype(jnp.float32) for a in inp]  # (B, nh, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        s = s * jnp.exp(wt)[..., None] + kt[..., None] * vt[:, :, None, :]
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), sT

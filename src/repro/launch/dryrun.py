@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks device count on first init.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import batch_axes as mesh_batch_axes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, arch_for_shape, input_specs
+from repro.models import transformer as tf
+from repro.sharding import (cache_shardings, data_shardings, param_shardings,
+                            state_shardings)
+
+COLLECTIVE_RE = re.compile(
+    r"(\S+)\s*=\s*(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b(.*)")
+GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo_text: str, default_group: int):
+    """Sum per-device link bytes for every collective in the compiled
+    (post-SPMD, local-shape) HLO. Ring-model accounting:
+      all-gather -> result_bytes; all-reduce -> 2x; reduce-scatter ->
+      result_bytes*(g-1); all-to-all/permute -> result_bytes."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = COLLECTIVE_RE.search(line)
+        if not m or m.group(2) == "tuple":
+            continue
+        dtype, dims, op, rest = m.group(2), m.group(3), m.group(4), m.group(5)
+        if op + "-start" in line and op + "-done" not in line:
+            pass
+        nbytes = DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        gm = GROUPS_RE.search(rest)
+        g = len(gm.group(1).split(",")) if gm else default_group
+        factor = {"all-gather": 1.0, "all-reduce": 2.0,
+                  "reduce-scatter": float(max(1, g - 1)),
+                  "all-to-all": 1.0, "collective-permute": 1.0}[op]
+        out[op] += nbytes * factor
+        counts[op] += 1
+    return out, counts
+
+
+def _logits_sharding(mesh, cfg, baxes):
+    b = baxes if baxes else None
+    if cfg.n_codebooks:
+        return NamedSharding(mesh, P(b, None, "model"))
+    return NamedSharding(mesh, P(b, "model"))
+
+
+def build_step(cfg, shape, mesh):
+    """Returns (jitted_fn, example_kwargs_specs) for this (arch, shape, mesh)."""
+    baxes = mesh_batch_axes(mesh, shape.global_batch)
+    specs = input_specs(cfg, shape)
+    cfg = arch_for_shape(cfg, shape)
+
+    params_shape = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = param_shardings(mesh, params_shape, cfg)
+    n_params = steps_mod.count_params(params_shape)
+
+    if shape.kind == "train":
+        opt = steps_mod.choose_optimizer(cfg, n_params)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_shard = state_shardings(mesh, opt_shape, params_shape, p_shard)
+        b_shard = data_shardings(mesh, baxes, specs)
+        # §Perf iteration I measured a net REGRESSION from microbatching at
+        # this scale (fp32 accumulator double-buffering in the while loop
+        # outweighs the activation savings) — keep mb=1; the feature stays
+        # available on make_train_step for smaller slices.
+        mb = 1
+        fn = steps_mod.make_train_step(cfg, opt, lambda s: jnp.float32(1e-4),
+                                       mesh=mesh, batch_axes=baxes,
+                                       microbatches=mb)
+        jfn = jax.jit(fn,
+                      in_shardings=(p_shard, o_shard, b_shard),
+                      out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+                      donate_argnums=(0, 1))
+        args = (params_shape, opt_shape, specs)
+    elif shape.kind == "prefill":
+        b_shard = data_shardings(mesh, baxes, specs)
+        cache_len = min(shape.seq_len, cfg.decode_window) if cfg.decode_window else shape.seq_len
+        fn = steps_mod.make_prefill_step(cfg, mesh=mesh, batch_axes=baxes,
+                                         cache_len=cache_len)
+        cache_shape = jax.eval_shape(lambda: tf.init_cache(cfg, shape.global_batch, cache_len))
+        c_shard = cache_shardings(mesh, cache_shape, baxes)
+        logits_shard = _logits_sharding(mesh, cfg, baxes)
+        jfn = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                      out_shardings=(logits_shard, c_shard))
+        args = (params_shape, specs)
+    else:  # decode
+        cache_spec = specs["cache"]
+        c_shard = cache_shardings(mesh, cache_spec, baxes)
+        b_shard = {"tokens": data_shardings(mesh, baxes, specs["tokens"]),
+                   "cache": c_shard,
+                   "t": NamedSharding(mesh, P())}
+        fn = steps_mod.make_serve_step(cfg, mesh=mesh, batch_axes=baxes)
+        logits_shard = _logits_sharding(mesh, cfg, baxes)
+        jfn = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                      out_shardings=(logits_shard, c_shard),
+                      donate_argnums=(1,))
+        args = (params_shape, specs)
+    return jfn, args, n_params, baxes
+
+
+def probe_plan(cfg):
+    """(L1, L2, k): per-layer costs are linear in depth, so
+    total(L) = f(L1) + k * (f(L2) - f(L1)) with structure-preserving probe
+    depths (keeps gemma2 local/global pairs, zamba2 super-layers of
+    `shared_attn_every` SSM blocks + 1 shared attn, VLM periods intact).
+    Needed because XLA HloCostAnalysis counts while-loop bodies ONCE —
+    scanned-layer FLOPs would be under-reported ~L x otherwise."""
+    L = cfg.n_layers
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        tail = L % every
+        return every + tail, 2 * every + tail, L // every - 1
+    if cfg.family == "vlm":
+        p = cfg.cross_attn_every
+        return p, 2 * p, L // p - 1
+    if L % 2 == 0:
+        return 2, 4, (L - 2) // 2
+    return 3, 5, (L - 3) // 2
+
+
+def _compile_cost(cfg, shape, mesh):
+    """flops/bytes/collectives of one compiled probe."""
+    jfn, args, _, _ = build_step(cfg, shape, mesh)
+    compiled = jfn.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll, _ = parse_collectives(compiled.as_text(), default_group=mesh.shape["model"])
+    return (float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
+            probes: bool = True):
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = arch_for_shape(get_config(arch), shape)
+    with mesh:
+        # 1) full-depth scan compile: THE existence proof + memory analysis
+        jfn, args, n_params, baxes = build_step(cfg, shape, mesh)
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+        coll_raw, coll_counts = parse_collectives(hlo, default_group=mesh.shape["model"])
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag = f"{arch}__{shape_name}__{'mp' if multi_pod else 'sp'}"
+            with open(os.path.join(hlo_dir, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+        t_full = time.time()
+
+        # 2) two shallow UNROLLED probes -> depth-extrapolated flops/bytes/
+        #    collectives (exact for depth-linear programs)
+        flops = bytes_acc = None
+        coll = coll_raw
+        if probes:
+            L1, L2, k = probe_plan(cfg)
+            pcfg = cfg.replace(scan_layers=False, attn_chunk=0)
+            f1, b1, c1 = _compile_cost(pcfg.replace(n_layers=L1), shape, mesh)
+            f2, b2, c2 = _compile_cost(pcfg.replace(n_layers=L2), shape, mesh)
+            flops = f1 + k * (f2 - f1)
+            bytes_acc = b1 + k * (b2 - b1)
+            coll = {op: c1[op] + k * (c2[op] - c1[op]) for op in c1}
+
+    n_dev = 512 if multi_pod else 256
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "n_params": n_params,
+        "batch_axes": list(baxes),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "flops_scan_raw": float(cost.get("flops", -1.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+        },
+        "collective_bytes_per_device": coll,
+        "collective_counts_scan": coll_counts,
+        "compile_seconds": round(t_full - t0, 1),
+        "total_seconds": round(time.time() - t0, 1),
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_done and os.path.exists(path):
+                    print(f"[skip] {tag}", flush=True)
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = run_one(arch, shape_name, mp, hlo_dir=args.hlo_dir)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    fl = res.get("flops_per_device") or res.get("flops_scan_raw") or -1
+                    print(f"[ok] {tag} compile={res['compile_seconds']}s "
+                          f"flops/dev={fl:.3e} "
+                          f"temp={res['memory']['temp_bytes']/1e9:.1f}GB", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    with open(os.path.join(args.out, tag + ".FAIL"), "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state. The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; smoke tests and benchmarks see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production mesh: 16x16 = 256 chips per pod; 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh, batch: int):
+    """Mesh axes usable for batch sharding (largest prefix of (pod, data)
+    whose product divides `batch`)."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    out, prod = [], 1
+    for a in axes:
+        if batch % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+    return tuple(out)

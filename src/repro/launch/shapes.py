@@ -1,0 +1,74 @@
+"""The four assigned input shapes + per-(arch, shape) input_specs.
+
+input_specs returns jax.ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# sliding window used when a quadratic-attention arch runs long_500k
+LONG_CONTEXT_WINDOW = 8192
+
+
+def arch_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt a config to a shape: long-context decode uses the sliding-
+    window KV-cache variant for every arch that has attention layers
+    (SSM/hybrid state is O(1) regardless). See DESIGN.md §4."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.replace(decode_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def token_struct(cfg: ModelConfig, batch: int, seq: int):
+    shp = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks else (batch, seq)
+    return jax.ShapeDtypeStruct(shp, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract inputs for the step function of this (arch, shape)."""
+    cfg = arch_for_shape(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": token_struct(cfg, B, S),
+                 "labels": token_struct(cfg, B, S)}
+        if cfg.family == "vlm":
+            batch["img_emb"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_vision), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": token_struct(cfg, B, S)}
+        if cfg.family == "vlm":
+            batch["img_emb"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_vision), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of seq_len (window-capped)
+    cache_len = min(S, cfg.decode_window) if cfg.decode_window else S
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, cache_len))
+    batch = {"tokens": token_struct(cfg, B, 1),
+             "cache": cache,
+             "t": jax.ShapeDtypeStruct((), jnp.int32)}
+    return batch

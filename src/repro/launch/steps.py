@@ -1,0 +1,92 @@
+"""Step functions (train / prefill / serve) shared by the trainer, the
+server, and the multi-pod dry-run."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig, cross_entropy
+from repro.optim import make_optimizer
+
+
+def count_params(params_shape) -> int:
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(params_shape))
+
+
+def choose_optimizer(cfg: ModelConfig, n_params: int):
+    """AdamW below 50B params; Adafactor above (fp32 moments for a 480B
+    model would not fit a v5e slice — DESIGN.md §6)."""
+    if n_params > 5e10:
+        return make_optimizer("adafactor")
+    return make_optimizer("adamw", weight_decay=0.1)
+
+
+def make_train_step(cfg: ModelConfig, opt, lr_fn, mesh=None, batch_axes=("data",),
+                    microbatches: int = 1):
+    """microbatches > 1 (§Perf iteration I): gradient accumulation over a
+    lax.scan — activation memory scales with B/microbatches at the cost of
+    one fp32 grad accumulator (= params size)."""
+
+    def loss_fn(p, b):
+        logits, extra = tf.forward(p, cfg, b["tokens"], mode="train",
+                                   img_emb=b.get("img_emb"),
+                                   mesh=mesh, batch_axes=batch_axes)
+        loss = cross_entropy(logits, b["labels"], cfg.final_logit_softcap)
+        if cfg.n_experts and extra is not None:
+            loss = loss + 0.01 * extra  # router load-balance aux
+        return loss
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # strided split keeps every microbatch sharded across the full
+            # (pod, data) batch axes (contiguous split would pin each
+            # microbatch to a subset of shards)
+            mb = jax.tree.map(
+                lambda x: x.reshape((x.shape[0] // microbatches, microbatches)
+                                    + x.shape[1:]).swapaxes(0, 1), batch)
+
+            def acc_fn(carry, b):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, b)
+                g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                     g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = lr_fn(opt_state["step"])
+        new_params, new_state = opt.update(grads, opt_state, params, lr)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, batch_axes=("data",),
+                      cache_len: int = 0, last_only: bool = True):
+    def prefill_step(params, batch):
+        logits, cache = tf.forward(params, cfg, batch["tokens"], mode="prefill",
+                                   img_emb=batch.get("img_emb"),
+                                   mesh=mesh, batch_axes=batch_axes,
+                                   cache_len=cache_len, last_only=last_only)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, batch_axes=("data",)):
+    def serve_step(params, batch):
+        logits, new_cache = tf.forward(params, cfg, batch["tokens"], mode="decode",
+                                       cache=batch["cache"], t=batch["t"],
+                                       mesh=mesh, batch_axes=batch_axes)
+        return logits[:, -1], new_cache
+
+    return serve_step

@@ -1,0 +1,211 @@
+"""Multi-head / grouped-query attention with RoPE, softcap, sliding window,
+query-chunked long-sequence path, and full/ring KV caches.
+
+Layouts: activations (B, S, d); q (B, S, H, hd); k/v (B, T, KV, hd).
+KV caches: {"k": (B, S_cache, KV, hd), "v": ..., "pos": (S_cache,) int32}
+where pos[slot] is the absolute position stored in that slot (-1 = empty).
+A ring buffer (sliding-window decode) is just `slot = t % S_cache`.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, init_rms, rms_norm, softcap
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attn(cfg: ModelConfig, key, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    # cross-attention consumes image embeddings already projected to d_model
+    d_kv_src = d
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), 0, cfg.cdtype),
+        "wk": dense_init(ks[1], (d_kv_src, KV * hd), 0, cfg.cdtype),
+        "wv": dense_init(ks[2], (d_kv_src, KV * hd), 0, cfg.cdtype),
+        "wo": dense_init(ks[3], (H * hd, d), 0, cfg.cdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.cdtype)
+        p["bk"] = jnp.zeros((KV * hd,), cfg.cdtype)
+        p["bv"] = jnp.zeros((KV * hd,), cfg.cdtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd)
+        p["k_norm"] = init_rms(hd)
+    return p
+
+
+def _project_q(p, cfg, x):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def _project_kv(p, cfg, x):
+    B, S, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def attn_core(q, k, v, q_pos, k_pos, window, attn_softcap, causal=True,
+              g_major=False):
+    """Online attention core (dense scores, fp32 softmax).
+
+    q: (B, Sq, H, hd); k, v: (B, T, KV, hd); q_pos (B?, Sq) or (Sq,);
+    k_pos (T,) absolute positions (-1 => invalid slot); window: scalar or
+    traced int (0 => unlimited). `g_major` selects the GQA head layout
+    (common.ModelConfig.gqa_layout) so the sharded head axis survives the
+    reshape.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qp = q_pos.reshape((1, Sq)) if q_pos.ndim == 1 else q_pos  # (B?, Sq)
+    qp = qp[:, None, None, :, None]  # (b1, 1, 1, Sq, 1)
+    kp = k_pos[None, None, None, None, :]  # (1,1,1,1,T)
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    w = jnp.asarray(window, jnp.int32)
+    ok = ok & jnp.where(w > 0, (qp - kp) < w, True)
+    if g_major:  # h = g*KV + kv
+        qg = q.reshape(B, Sq, G, KV, hd)
+        scores = jnp.einsum("bqgkd,btkd->bgkqt", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = jnp.where(ok, softcap(scores, attn_softcap), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bgkqt,btkd->bqgkd", probs.astype(v.dtype), v)
+    else:  # h = kv*G + g
+        qg = q.reshape(B, Sq, KV, G, hd)
+        scores = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = jnp.where(ok, softcap(scores, attn_softcap), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attn_forward(p, cfg: ModelConfig, x, positions, window=0, kv_emb=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    kv_emb: if given, cross-attention source (B, T_img, d_vision) — not
+    causal, no RoPE on kv.
+    """
+    B, S, _ = x.shape
+    q = _project_q(p, cfg, x)
+    if kv_emb is None:
+        k, v = _project_kv(p, cfg, x)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_pos = positions if positions.ndim == 1 else positions[0]
+        causal = True
+    else:
+        k, v = _project_kv(p, cfg, kv_emb)
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        causal = False
+
+    g_major = cfg.gqa_layout == "g_major"
+    if cfg.attn_impl == "pallas" and kv_emb is None and cfg.gqa_layout == "kv_major":
+        # first-class kernel path: VMEM-resident online-softmax scores
+        from repro.kernels.flash_attention.ops import flash_attention as fa
+        w = int(window) if not hasattr(window, "dtype") else 0  # static only
+        out = fa(q, k, v, causal=True, window=w,
+                 softcap=float(cfg.attn_logit_softcap))
+        return out.reshape(B, S, -1) @ p["wo"], (k, v)
+    chunk = cfg.attn_chunk
+    if chunk and S > chunk and S % chunk == 0 and causal:
+        nc = S // chunk
+        qc = q.reshape(B, nc, chunk, cfg.n_heads, cfg.hd).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(nc, chunk) if positions.ndim == 1 else positions.reshape(B, nc, chunk).transpose(1, 0, 2)
+        core = partial(attn_core, k=k, v=v, k_pos=k_pos, window=window,
+                       attn_softcap=cfg.attn_logit_softcap, causal=True,
+                       g_major=g_major)
+        # §Perf iteration H: checkpoint each query chunk so the backward
+        # holds ONE chunk's fp32 probs instead of all of them (flash-
+        # attention-style recompute; the Pallas kernel does this natively
+        # on TPU). Measured: -8 GB/device live on qwen3-moe train_4k.
+        core_ckpt = jax.checkpoint(lambda qx, px, _core=core: _core(qx, q_pos=px),
+                                   prevent_cse=False)
+        out = jax.lax.map(lambda qp: core_ckpt(qp[0], qp[1]), (qc, pc))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, cfg.hd)
+    else:
+        out = attn_core(q, k, v, positions, k_pos, window,
+                        cfg.attn_logit_softcap, causal, g_major=g_major)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    import jax.numpy as _  # noqa
+    return jax.eval_shape(lambda: init_kv_cache(cfg, batch, cache_len))
+
+
+def fill_kv_cache(cache, k, v, first_pos: int = 0):
+    """Write prefilled (B, S, KV, hd) k/v for absolute positions
+    [first_pos, first_pos+S) into the cache with ring-buffer slot = pos % len."""
+    S = k.shape[1]
+    S_cache = cache["k"].shape[1]
+    pos = jnp.arange(first_pos, first_pos + S, dtype=jnp.int32)
+    slots = jnp.mod(pos, S_cache)
+    return {
+        "k": cache["k"].at[:, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, slots].set(v.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[slots].set(pos),
+    }
+
+
+def attn_decode(p, cfg: ModelConfig, x, t, cache, window=0, kv_emb=None):
+    """One-token decode. x: (B, 1, d); t: scalar int32 absolute position.
+
+    Returns (out (B,1,d), new_cache). Ring-buffer semantics when the cache
+    is shorter than t (sliding window).
+    """
+    if kv_emb is not None or cache is not None and "static" in cache:
+        # cross-attention: cache holds precomputed image k/v, never updated
+        k, v = cache["k"], cache["v"]
+        q = _project_q(p, cfg, x)
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        out = attn_core(q, k, v, jnp.zeros((1,), jnp.int32), k_pos, 0,
+                        cfg.attn_logit_softcap, causal=False)
+        return out.reshape(x.shape[0], 1, -1) @ p["wo"], cache
+
+    B = x.shape[0]
+    q = _project_q(p, cfg, x)
+    k_new, v_new = _project_kv(p, cfg, x)
+    pos = jnp.full((B, 1), t, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    S_cache = cache["k"].shape[1]
+    slot = jnp.mod(t, S_cache)
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new_pos = jax.lax.dynamic_update_slice(cache["pos"], jnp.full((1,), t, jnp.int32), (slot,))
+    out = attn_core(q, new_k, new_v, pos, new_pos, window, cfg.attn_logit_softcap,
+                    causal=True, g_major=cfg.gqa_layout == "g_major")
+    new_cache = {"k": new_k, "v": new_v, "pos": new_pos}
+    return out.reshape(B, 1, -1) @ p["wo"], new_cache

@@ -1,0 +1,206 @@
+"""Paper-scale image classifiers (the FedPAE experiment bench).
+
+Five genuinely distinct families, mirroring the paper's CNN-4 / ResNet-18 /
+DenseNet-121 / GoogleNet / VGG-11 heterogeneity at synthetic-data scale:
+  cnn4      — 2x conv + 2x fc (McMahan et al. FedAvg CNN)
+  resnet    — residual blocks with projection shortcuts
+  vgg       — deep 3x3 conv stacks + maxpool
+  densenet  — dense concatenation blocks
+  inception — parallel 1x1 / 3x3 / 5x5 branches
+
+All pure-functional: init(key, cfg) -> params; apply(params, x) -> logits.
+x: (B, H, W, C) float32. Model heterogeneity in FedPAE means clients pick
+any of these — nothing in core/ depends on which.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    family: str = "cnn4"
+    n_classes: int = 10
+    width: int = 16
+    in_channels: int = 3
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    std = (kh * kw * cin) ** -0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _dense_init(key, din, dout):
+    std = din ** -0.5
+    return jax.random.normal(key, (din, dout), jnp.float32) * std
+
+
+def conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def pool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def gap(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def norm(x):  # parameter-free channel norm (keeps the zoo simple)
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5)
+
+
+# Every family produces features of dim FEAT_MULT * width and ends with a
+# homogeneous linear "head" (FEAT, n_classes) — LG-FedAvg and FedGH
+# aggregate exactly this leaf across heterogeneous feature extractors.
+FEAT_MULT = 2
+
+
+# --- cnn4 ------------------------------------------------------------------
+
+def init_cnn4(key, cfg: CNNConfig):
+    w = cfg.width
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": _conv_init(ks[0], 3, 3, cfg.in_channels, w),
+        "c2": _conv_init(ks[1], 3, 3, w, 2 * w),
+        "f1": _dense_init(ks[2], 2 * w, FEAT_MULT * w),
+        "head": _dense_init(ks[3], FEAT_MULT * w, cfg.n_classes),
+    }
+
+
+def feat_cnn4(p, x):
+    x = pool(jax.nn.relu(conv(x, p["c1"])))
+    x = pool(jax.nn.relu(conv(x, p["c2"])))
+    x = gap(x)
+    return jax.nn.relu(x @ p["f1"])
+
+
+# --- vgg -------------------------------------------------------------------
+
+def init_vgg(key, cfg: CNNConfig):
+    w = cfg.width
+    chans = [cfg.in_channels, w, w, 2 * w, FEAT_MULT * w]
+    ks = jax.random.split(key, len(chans))
+    p = {f"c{i}": _conv_init(ks[i], 3, 3, chans[i], chans[i + 1])
+         for i in range(len(chans) - 1)}
+    p["head"] = _dense_init(ks[-1], FEAT_MULT * w, cfg.n_classes)
+    return p
+
+
+def feat_vgg(p, x):
+    x = jax.nn.relu(conv(x, p["c0"]))
+    x = pool(jax.nn.relu(conv(x, p["c1"])))
+    x = jax.nn.relu(conv(x, p["c2"]))
+    x = pool(jax.nn.relu(conv(x, p["c3"])))
+    return gap(x)
+
+
+# --- resnet ----------------------------------------------------------------
+
+def init_resnet(key, cfg: CNNConfig):
+    w = cfg.width
+    ks = jax.random.split(key, 8)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, cfg.in_channels, w),
+        "b1a": _conv_init(ks[1], 3, 3, w, w),
+        "b1b": _conv_init(ks[2], 3, 3, w, w),
+        "b2a": _conv_init(ks[3], 3, 3, w, 2 * w),
+        "b2b": _conv_init(ks[4], 3, 3, 2 * w, 2 * w),
+        "proj2": _conv_init(ks[5], 1, 1, w, 2 * w),
+        "head": _dense_init(ks[6], FEAT_MULT * w, cfg.n_classes),
+    }
+
+
+def feat_resnet(p, x):
+    x = jax.nn.relu(conv(x, p["stem"]))
+    h = jax.nn.relu(conv(x, p["b1a"]))
+    x = jax.nn.relu(x + conv(h, p["b1b"]))
+    h = jax.nn.relu(conv(x, p["b2a"], stride=2))
+    x = jax.nn.relu(conv(x, p["proj2"], stride=2) + conv(h, p["b2b"]))
+    return gap(norm(x))
+
+
+# --- densenet --------------------------------------------------------------
+
+def init_densenet(key, cfg: CNNConfig):
+    w = cfg.width
+    g = w // 2  # growth rate
+    ks = jax.random.split(key, 5)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, cfg.in_channels, w),
+        "d1": _conv_init(ks[1], 3, 3, w, g),
+        "d2": _conv_init(ks[2], 3, 3, w + g, g),
+        "d3": _conv_init(ks[3], 3, 3, w + 2 * g, g),
+        "mix": _conv_init(ks[4], 1, 1, w + 3 * g, FEAT_MULT * w),
+        "head": _dense_init(jax.random.fold_in(ks[4], 1), FEAT_MULT * w, cfg.n_classes),
+    }
+
+
+def feat_densenet(p, x):
+    x = jax.nn.relu(conv(x, p["stem"]))
+    for name in ("d1", "d2", "d3"):
+        h = jax.nn.relu(conv(norm(x), p[name]))
+        x = jnp.concatenate([x, h], axis=-1)
+    x = jax.nn.relu(conv(x, p["mix"]))
+    return gap(x)
+
+
+# --- inception -------------------------------------------------------------
+
+def init_inception(key, cfg: CNNConfig):
+    w = cfg.width
+    ks = jax.random.split(key, 6)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, cfg.in_channels, w),
+        "b1": _conv_init(ks[1], 1, 1, w, w // 2),
+        "b3": _conv_init(ks[2], 3, 3, w, w // 2),
+        "b5": _conv_init(ks[3], 5, 5, w, w // 2),
+        "mix": _conv_init(ks[4], 1, 1, 3 * (w // 2), FEAT_MULT * w),
+        "head": _dense_init(ks[5], FEAT_MULT * w, cfg.n_classes),
+    }
+
+
+def feat_inception(p, x):
+    x = pool(jax.nn.relu(conv(x, p["stem"])))
+    b = jnp.concatenate([jax.nn.relu(conv(x, p[k])) for k in ("b1", "b3", "b5")],
+                        axis=-1)
+    x = jax.nn.relu(conv(norm(b), p["mix"]))
+    return gap(x)
+
+
+FAMILIES: dict[str, tuple[Callable, Callable]] = {
+    "cnn4": (init_cnn4, feat_cnn4),
+    "vgg": (init_vgg, feat_vgg),
+    "resnet": (init_resnet, feat_resnet),
+    "densenet": (init_densenet, feat_densenet),
+    "inception": (init_inception, feat_inception),
+}
+
+
+def init_model(family: str, key, cfg: CNNConfig):
+    return FAMILIES[family][0](key, cfg)
+
+
+def apply_features(family: str, params, x):
+    """(B, FEAT_MULT*width) penultimate features."""
+    return FAMILIES[family][1](params, x)
+
+
+def apply_model(family: str, params, x):
+    return apply_features(family, params, x) @ params["head"]
+
+
+def n_params(params) -> int:
+    return sum(l.size for l in jax.tree.leaves(params))

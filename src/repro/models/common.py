@@ -1,0 +1,178 @@
+"""Shared model config + primitive ops for the repro model zoo.
+
+Everything is pure-functional: params are nested dicts of jnp arrays,
+layers are `init_*(cfg, key) -> params` / `*_apply(params, cfg, x, ...)`
+pairs. Repeated blocks are stacked along a leading layer axis and executed
+with `jax.lax.scan` so the lowered HLO stays small for 80+ layer models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes any architecture in the assigned pool."""
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab: int = 1024
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    final_logit_softcap: float = 0.0
+    attn_logit_softcap: float = 0.0
+    # gemma2-style local/global alternation (training + prefill)
+    attn_pattern: str = "global"  # "global" | "local_global"
+    local_window: int = 0
+    post_block_norms: bool = False
+    # sliding-window KV cache for long-context decode (0 = full cache)
+    decode_window: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_residual: bool = False
+    capacity_factor: float = 1.25
+    # SSM (Mamba2-style)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    # hybrid (zamba2): shared attention block applied every k SSM layers
+    shared_attn_every: int = 0
+    n_shared_attn: int = 2
+    # RWKV6
+    rwkv_head_dim: int = 64
+    # VLM (llama3.2-vision): every k-th layer is cross-attention to image emb
+    cross_attn_every: int = 0
+    n_img_tokens: int = 0
+    d_vision: int = 0
+    # audio (musicgen): parallel codebooks with delay pattern
+    n_codebooks: int = 0
+    # numerics / runtime
+    dtype: str = "bfloat16"
+    attn_chunk: int = 1024  # query-chunked attention above this seq len
+    # GQA head layout (§Perf iteration E): "kv_major" groups q-heads
+    # consecutively per kv head (h = kv*G + g); "g_major" interleaves
+    # (h = g*KV + kv). Chosen so the model-axis shard boundary falls on a
+    # single reshape dim — otherwise GSPMD replicates the whole attention
+    # (measured 16x FLOPs + 17 GB fp32 score buffers on qwen3-moe).
+    gqa_layout: str = "kv_major"
+    # "xla" = chunked-einsum attention (portable, what the dry-run lowers);
+    # "pallas" = kernels/flash_attention (TPU; interpret-mode on CPU).
+    attn_impl: str = "xla"
+    scan_layers: bool = True
+    source: str = ""  # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when decode state is O(1) or windowed (long_500k eligible natively)."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.bfloat16):
+    """Fan-in scaled truncated-normal init."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    if not isinstance(in_axis, int):
+        for a in in_axis:
+            fan_in *= shape[a]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int = 0):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), 0, cfg.cdtype),
+        "w_up": dense_init(k2, (d, ff), 0, cfg.cdtype),
+        "w_down": dense_init(k3, (ff, d), 0, cfg.cdtype),
+    }
+
+
+def mlp_apply(p, cfg: ModelConfig, x):
+    act = activation(cfg.act)
+    h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def cross_entropy(logits, labels, softcap_val: float = 0.0):
+    """Mean token cross-entropy; logits (..., V) any float dtype, labels int."""
+    logits = softcap(logits.astype(jnp.float32), softcap_val)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,186 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent per-channel decay +
+channel-mix, in the chunked linear-attention form (TPU-native: intra-chunk
+terms are matmuls in log-decay space, inter-chunk state is a short scan).
+
+Per head (K = V = head_dim): state S in R^{K x V}
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = S_{t-1}^T r_t + (r_t . (u*k_t)) v_t         (u = per-channel bonus)
+w_t in (0,1) is data-dependent: w_t = exp(-exp(w0 + tanh(x W_a) W_b)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, init_rms, rms_norm
+
+CHUNK = 128
+LORA = 32
+
+
+def rwkv_dims(cfg: ModelConfig):
+    nh = cfg.d_model // cfg.rwkv_head_dim
+    return nh, cfg.rwkv_head_dim
+
+
+def init_rwkv(cfg: ModelConfig, key):
+    d = cfg.d_model
+    nh, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], (d, d), 0, cfg.cdtype),
+        "wk": dense_init(ks[1], (d, d), 0, cfg.cdtype),
+        "wv": dense_init(ks[2], (d, d), 0, cfg.cdtype),
+        "wg": dense_init(ks[3], (d, d), 0, cfg.cdtype),
+        "wo": dense_init(ks[4], (d, d), 0, cfg.cdtype),
+        "w0": jnp.full((d,), -1.0, jnp.float32),  # decay base
+        "w_a": dense_init(ks[5], (d, LORA), 0, jnp.float32),
+        "w_b": dense_init(ks[6], (LORA, d), 0, jnp.float32) * 0.1,
+        "u": jnp.zeros((d,), jnp.float32),  # bonus
+        "ln": init_rms(d),
+        "n1": init_rms(d),
+        "n2": init_rms(d),
+        # channel-mix
+        "cm_mix": jnp.full((d,), 0.5, jnp.float32),
+        "cm_k": dense_init(ks[7], (d, cfg.d_ff), 0, cfg.cdtype),
+        "cm_v": dense_init(ks[8], (cfg.d_ff, d), 0, cfg.cdtype),
+    }
+
+
+def _token_shift(x, last):
+    """x: (B, S, d); last: (B, d) previous token (zeros at t=0)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def wkv_chunk_scan(r, k, v, logw, u, s0):
+    """Chunked WKV. r,k,v: (B, S, nh, hd); logw: (B, S, nh, hd) (<0);
+    u: (nh, hd); s0: (B, nh, hd, hd) initial state. Returns (y, sT)."""
+    B, S, nh, hd = r.shape
+    Q = min(CHUNK, S)
+    nc = S // Q
+    rs = r.reshape(B, nc, Q, nh, hd)
+    ks_ = k.reshape(B, nc, Q, nh, hd)
+    vs = v.reshape(B, nc, Q, nh, hd)
+    lw = logw.reshape(B, nc, Q, nh, hd).astype(jnp.float32)
+    cum = jnp.cumsum(lw, axis=2)  # (B,nc,Q,nh,hd) <= 0, decreasing
+    # intra-chunk: A[i,j] = sum_c r_i[c] e^{cum_{i-1}[c] - cum_j[c]} k_j[c], j < i
+    cum_prev = cum - lw  # cumulative decay up to and including step i-1
+    r_dec = rs.astype(jnp.float32) * jnp.exp(cum_prev)
+    k_dec = ks_.astype(jnp.float32) * jnp.exp(-cum)
+    A = jnp.einsum("bnqhc,bnthc->bnhqt", r_dec, k_dec)  # (B,nc,nh,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)[None, None, None]
+    A = jnp.where(mask, A, 0.0)
+    diag = jnp.einsum("bnqhc,bnqhc->bnqh", rs.astype(jnp.float32),
+                      ks_.astype(jnp.float32) * u[None, None, None].astype(jnp.float32))
+    y_intra = jnp.einsum("bnhqt,bnthd->bnqhd", A, vs.astype(jnp.float32))
+    y_intra = y_intra + diag[..., None] * vs.astype(jnp.float32)
+    # inter-chunk: contribution of carried state S_prev
+    y_state_w = r_dec  # r_i * e^{cum_{i-1}}
+    # state update: S_new = diag(e^{cum_Q}) S_prev + sum_j e^{cum_Q - cum_j} k_j v_j^T
+    kw = ks_.astype(jnp.float32) * jnp.exp(cum[:, :, -1:, :, :] - cum)
+    S_chunk = jnp.einsum("bnqhc,bnqhd->bnhcd", kw, vs.astype(jnp.float32))
+    decay_chunk = jnp.exp(cum[:, :, -1])  # (B, nc, nh, hd)
+
+    def step(s, inp):
+        s_c, dec = inp
+        s_in = s
+        s = s * dec[..., None] + s_c
+        return s, s_in
+
+    sT, s_prevs = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (S_chunk.transpose(1, 0, 2, 3, 4), decay_chunk.transpose(1, 0, 2, 3)))
+    y_inter = jnp.einsum("bnqhc,nbhcd->bnqhd", y_state_w, s_prevs)
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(r.dtype), sT
+
+
+def _time_mix(p, cfg, x, last_x, s0):
+    B, S, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    prev = _token_shift(x, last_x)
+    xr = _mix(x, prev, p["mix_r"])
+    xk = _mix(x, prev, p["mix_k"])
+    xv = _mix(x, prev, p["mix_v"])
+    xw = _mix(x, prev, p["mix_w"])
+    xg = _mix(x, prev, p["mix_g"])
+    r = (xr @ p["wr"]).reshape(B, S, nh, hd)
+    k = (xk @ p["wk"]).reshape(B, S, nh, hd)
+    v = (xv @ p["wv"]).reshape(B, S, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["w_a"]) @ p["w_b"])
+    logw = logw.reshape(B, S, nh, hd)
+    u = p["u"].reshape(nh, hd)
+    y, sT = wkv_chunk_scan(r, k, v, logw, u, s0)
+    y = rms_norm(y.reshape(B, S, d), p["ln"], cfg.norm_eps) * g
+    return y @ p["wo"], sT, x[:, -1, :]
+
+
+def _channel_mix(p, cfg, xn, last_x):
+    prev = _token_shift(xn, last_x)
+    xk = _mix(xn, prev, p["cm_mix"])
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return h @ p["cm_v"], xn[:, -1, :]
+
+
+def rwkv_forward(p, cfg: ModelConfig, x, state=None):
+    """Full RWKV6 block (time-mix + channel-mix). x: (B, S, d)."""
+    B, S, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    if state is None:
+        state = init_rwkv_state(cfg, B)
+    a, sT, last_tm = _time_mix(p, cfg, rms_norm(x, p["n1"], cfg.norm_eps),
+                               state["last_tm"], state["s"])
+    x = x + a
+    b, last_cm = _channel_mix(p, cfg, rms_norm(x, p["n2"], cfg.norm_eps), state["last_cm"])
+    x = x + b
+    return x, {"s": sT.astype(cfg.cdtype), "last_tm": last_tm, "last_cm": last_cm}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    nh, hd = rwkv_dims(cfg)
+    return {
+        "s": jnp.zeros((batch, nh, hd, hd), cfg.cdtype),
+        "last_tm": jnp.zeros((batch, cfg.d_model), cfg.cdtype),
+        "last_cm": jnp.zeros((batch, cfg.d_model), cfg.cdtype),
+    }
+
+
+def rwkv_decode(p, cfg: ModelConfig, x, state):
+    """One-token decode. x: (B, 1, d). O(1) state update."""
+    B = x.shape[0]
+    nh, hd = rwkv_dims(cfg)
+    x_raw = x[:, 0]
+    xt = rms_norm(x_raw, p["n1"], cfg.norm_eps)
+    prev = state["last_tm"]
+    mix = lambda mu: xt + (prev - xt) * mu.astype(x.dtype)
+    r = (mix(p["mix_r"]) @ p["wr"]).reshape(B, nh, hd).astype(jnp.float32)
+    k = (mix(p["mix_k"]) @ p["wk"]).reshape(B, nh, hd).astype(jnp.float32)
+    v = (mix(p["mix_v"]) @ p["wv"]).reshape(B, nh, hd).astype(jnp.float32)
+    g = jax.nn.silu(mix(p["mix_g"]) @ p["wg"])
+    logw = -jnp.exp(p["w0"] + jnp.tanh(mix(p["mix_w"]).astype(jnp.float32) @ p["w_a"]) @ p["w_b"])
+    w = jnp.exp(logw).reshape(B, nh, hd)
+    u = p["u"].reshape(nh, hd)
+    s = state["s"].astype(jnp.float32)  # (B, nh, K, V)
+    y = jnp.einsum("bhk,bhkv->bhv", r, s) + jnp.einsum("bhk,bhk,bhv->bhv", r, u[None] * k, v)
+    s_new = s * w[..., None] + k[..., None] * v[:, :, None, :]
+    y = rms_norm(y.reshape(B, 1, cfg.d_model).astype(x.dtype), p["ln"], cfg.norm_eps) * g[:, None, :]
+    a = y[:, 0] @ p["wo"]
+    x1 = x_raw + a
+    x1n = rms_norm(x1, p["n2"], cfg.norm_eps)
+    prev_cm = state["last_cm"]
+    xk = x1n + (prev_cm - x1n) * p["cm_mix"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    x2 = x1 + h @ p["cm_v"]
+    new_state = {"s": s_new.astype(cfg.cdtype), "last_tm": xt, "last_cm": x1n}
+    return x2[:, None, :], new_state

@@ -1,0 +1,190 @@
+"""Mamba2-style selective SSM block (SSD), TPU-native chunked formulation.
+
+GPU Mamba2 uses warp-level scans; on TPU we use the chunked/block-parallel
+SSD algorithm: intra-chunk terms are batched matmuls (MXU-shaped), the
+inter-chunk state is a short `lax.scan` over n_chunks. The recurrence is
+
+    h_t = exp(a_t) h_{t-1} + dt_t * (B_t outer x_t)      a_t = -exp(A_log) dt_t
+    y_t = C_t . h_t + D * x_t
+
+with per-head scalar decay a_t, state (hd, ds) per head. Decode is a single
+O(1) state update. `kernels/ssd_scan` mirrors the chunk body in Pallas.
+
+§Perf iteration C (TP-aligned projections): the projections are split into
+separate z / x / BC / dt weights so the inner dimension can be sharded
+over the `model` axis at HEAD granularity, the gate norm is per-head
+(grouped RMSNorm, as in Mamba2), and out_proj contracts the model-sharded
+dim — Megatron-style: ONE bf16 psum per layer instead of the per-layer
+fp32 activation all-reduces the fused-projection FSDP layout induced
+(measured on zamba2-7b prefill_32k: see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, init_rms
+
+CHUNK = 256
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    return d_inner, nh, cfg.ssm_state
+
+
+def init_ssm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_inner, nh, ds = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_z": dense_init(ks[0], (d, d_inner), 0, cfg.cdtype),
+        "in_x": dense_init(ks[1], (d, d_inner), 0, cfg.cdtype),
+        "in_bc": dense_init(ks[2], (d, 2 * ds), 0, cfg.cdtype),
+        "in_dt": dense_init(ks[3], (d, nh), 0, cfg.cdtype),
+        "conv_x": dense_init(ks[4], (cfg.ssm_conv, d_inner), 0, jnp.float32) * 0.1,
+        "conv_bc": dense_init(ks[5], (cfg.ssm_conv, 2 * ds), 0, jnp.float32) * 0.1,
+        "conv_xb": jnp.zeros((d_inner,), jnp.float32),
+        "conv_bcb": jnp.zeros((2 * ds,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rms(d_inner),  # applied per head (grouped RMSNorm)
+        "out_proj": dense_init(ks[2], (d_inner, d), 0, cfg.cdtype),
+    }
+
+
+def _conv_train(u, w, b):
+    """Depthwise causal conv over sequence. u: (B, S, C) fp32; w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _group_rms(y, scale, nh, hd, eps):
+    """Per-head RMSNorm (Mamba2 grouped norm) — model-parallel friendly."""
+    B, S, _ = y.shape
+    yh = y.reshape(B, S, nh, hd).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + eps)
+    yh = yh * (1.0 + scale.astype(jnp.float32).reshape(nh, hd))
+    return yh.reshape(B, S, nh * hd).astype(y.dtype)
+
+
+def ssd_chunk_scan(x, dt, A_log, B, C, D, h0=None):
+    """Chunked SSD. x: (B, S, nh, hd); dt: (B, S, nh) (post-softplus);
+    B, C: (B, S, ds); returns (y, h_final (B, nh, hd, ds))."""
+    Bb, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(CHUNK, S)
+    nc = S // Q
+    A = -jnp.exp(A_log)  # (nh,) negative
+    a = dt * A  # (B, S, nh) log-decay per step
+
+    xc = x.reshape(Bb, nc, Q, nh, hd)
+    dtc = dt.reshape(Bb, nc, Q, nh)
+    ac = a.reshape(Bb, nc, Q, nh)
+    Bc = B.reshape(Bb, nc, Q, ds)
+    Cc = C.reshape(Bb, nc, Q, ds)
+
+    cum = jnp.cumsum(ac, axis=2)  # (B, nc, Q, nh) cumulative log decay
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j , j <= i
+    CB = jnp.einsum("bnqs,bnts->bnqt", Cc, Bc)  # (B, nc, Q, Q)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(mask, li, -jnp.inf))
+    scores = CB[..., None] * L * dtc[:, :, None, :, :]  # (B,nc,Q(i),Q(j),nh)
+    y_intra = jnp.einsum("bnqth,bnthd->bnqhd", scores.astype(x.dtype), xc)
+
+    # inter-chunk state: S_chunk = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    wj = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B, nc, Q, nh)
+    S_chunk = jnp.einsum("bnqh,bnqs,bnqhd->bnhds", wj.astype(x.dtype), Bc.astype(x.dtype), xc)
+    decay_chunk = jnp.exp(cum[:, :, -1, :])  # (B, nc, nh) total chunk decay
+
+    def step(h, inp):
+        s_c, dec = inp  # (B, nh, hd, ds), (B, nh)
+        h_in = h
+        h = h * dec[:, :, None, None].astype(h.dtype) + s_c
+        return h, h_in
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, nh, hd, ds), x.dtype)
+    hT, h_prevs = jax.lax.scan(step, h0,
+                               (S_chunk.transpose(1, 0, 2, 3, 4), decay_chunk.transpose(1, 0, 2)))
+    # h_prevs: (nc, B, nh, hd, ds) state at the START of each chunk
+    y_inter = jnp.einsum("bnqs,bnqh,nbhds->bnqhd",
+                         Cc.astype(x.dtype), jnp.exp(cum).astype(x.dtype), h_prevs)
+    y = y_intra + y_inter + xc * D[None, None, None, :, None].astype(x.dtype)
+    return y.reshape(Bb, S, nh, hd), hT
+
+
+def _project(p, cfg, x):
+    z = x @ p["in_z"]
+    xs = x @ p["in_x"]
+    bc = x @ p["in_bc"]
+    dt = x @ p["in_dt"]
+    return z, xs, bc, dt
+
+
+def ssm_forward(p, cfg: ModelConfig, x):
+    """Train/prefill path. x: (B, S, d) -> (out, state)."""
+    B, S, d = x.shape
+    d_inner, nh, ds = ssm_dims(cfg)
+    z, xs, bc, dt = _project(p, cfg, x)
+    xs = _conv_train(xs.astype(jnp.float32), p["conv_x"], p["conv_xb"]).astype(x.dtype)
+    bc = _conv_train(bc.astype(jnp.float32), p["conv_bc"], p["conv_bcb"]).astype(x.dtype)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(B, S, nh, cfg.ssm_head_dim)
+    y, hT = ssd_chunk_scan(xh, dtp, p["A_log"], Bm, Cm, p["D"])
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = _group_rms(y, p["norm"], nh, cfg.ssm_head_dim, cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"h": hT, "conv": conv_tail(x, p, cfg)}
+
+
+def conv_tail(x, p, cfg):
+    """Last K-1 pre-conv features, for seamless prefill -> decode."""
+    K = cfg.ssm_conv
+    tail = x[:, -(K - 1):, :]
+    if tail.shape[1] < K - 1:  # short prefill: left-pad with zeros
+        tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+    xs = tail @ p["in_x"]
+    bc = tail @ p["in_bc"]
+    return jnp.concatenate([xs, bc], axis=-1).astype(jnp.float32)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    d_inner, nh, ds = ssm_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, ds), cfg.cdtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * ds), jnp.float32),
+    }
+
+
+def ssm_decode(p, cfg: ModelConfig, x, state):
+    """One-token decode. x: (B, 1, d) -> (out, new_state). O(1) in context."""
+    B = x.shape[0]
+    d_inner, nh, ds = ssm_dims(cfg)
+    z, xs, bc, dt = _project(p, cfg, x)
+    feats = jnp.concatenate([xs[:, 0], bc[:, 0]], axis=-1).astype(jnp.float32)
+    conv_buf = jnp.concatenate([state["conv"], feats[:, None, :]], axis=1)  # (B,K,C)
+    w_all = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=1)
+    b_all = jnp.concatenate([p["conv_xb"], p["conv_bcb"]])
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_buf, w_all) + b_all)
+    conv_out = conv_out.astype(x.dtype)
+    xs1, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt1 * A)  # (B, nh)
+    xh = xs1.reshape(B, nh, cfg.ssm_head_dim)
+    h = state["h"].astype(jnp.float32)
+    h = h * dec[:, :, None, None] + (dt1[:, :, None] * xh)[..., None] * Bm[:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhds,bs->bhd", h, Cm.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = _group_rms(y, p["norm"], nh, cfg.ssm_head_dim, cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = {"h": h.astype(state["h"].dtype), "conv": conv_buf[:, 1:, :]}
+    return out, new_state

@@ -1,0 +1,389 @@
+"""Model builder: assembles dense / moe / ssm / hybrid / vlm / audio
+architectures from a ModelConfig, with three execution modes:
+
+  train   — full-sequence forward, logits for the loss (remat'd scan)
+  prefill — full-sequence forward, logits + populated decode caches
+  decode  — one new token against the cache (serve_step)
+
+Repeated blocks are stacked on a leading layer axis and run with
+`jax.lax.scan`; heterogeneous interleavings (gemma2 local/global, VLM
+cross-attn every 5th layer, zamba2 shared-attention every 6 SSM blocks)
+use per-layer scanned flags or period-structured nested scans so the HLO
+stays compact for 80-100 layer models.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .common import (ModelConfig, dense_init, init_mlp, init_rms, mlp_apply,
+                     rms_norm, softcap)
+
+
+# ---------------------------------------------------------------------------
+# block init / apply (attention + FFN, the shared transformer block)
+# ---------------------------------------------------------------------------
+
+def init_attn_mlp_block(cfg: ModelConfig, key, cross: bool = False, use_moe: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": init_rms(cfg.d_model),
+        "ln2": init_rms(cfg.d_model),
+        "attn": attn.init_attn(cfg, k1, cross=cross),
+        "ffn": moe_mod.init_moe(cfg, k2) if use_moe else init_mlp(cfg, k2),
+    }
+    if cfg.post_block_norms:
+        p["ln1_post"] = init_rms(cfg.d_model)
+        p["ln2_post"] = init_rms(cfg.d_model)
+    return p
+
+
+def attn_mlp_block(p, cfg: ModelConfig, x, ctx, cache, *, cross=False, use_moe=False):
+    """ctx: dict(mode, positions, t, window, img_emb, mesh, batch_axes).
+    Returns (x, new_cache)."""
+    mode = ctx["mode"]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    window = ctx.get("window", 0)
+    if mode == "decode":
+        if cross:
+            a, new_cache = attn.attn_decode(p["attn"], cfg, h, ctx["t"],
+                                            dict(cache, static=True))
+            new_cache = {k: new_cache[k] for k in ("k", "v")}
+        else:
+            a, new_cache = attn.attn_decode(p["attn"], cfg, h, ctx["t"], cache, window=window)
+    else:
+        kv_emb = ctx.get("img_emb") if cross else None
+        a, (k, v) = attn.attn_forward(p["attn"], cfg, h, ctx["positions"],
+                                      window=window, kv_emb=kv_emb)
+        if mode == "prefill":
+            if cross:
+                new_cache = {"k": k, "v": v}
+            else:
+                clen = ctx["cache_len"]
+                S_full = k.shape[1]
+                new_cache = attn.fill_kv_cache(attn.init_kv_cache(cfg, x.shape[0], clen),
+                                               k[:, -min(clen, S_full):],
+                                               v[:, -min(clen, S_full):],
+                                               first_pos=max(0, S_full - clen))
+        else:
+            new_cache = None
+    if "ln1_post" in p:
+        a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        with_aux = mode == "train"
+        f = moe_mod.moe_ffn(p["ffn"], cfg, h2, mesh=ctx.get("mesh"),
+                            batch_axes=ctx.get("batch_axes", ("data",)),
+                            with_aux=with_aux)
+        if with_aux:
+            f, aux = f
+            new_cache = aux  # train mode: the cache slot carries aux loss
+    else:
+        f = mlp_apply(p["ffn"], cfg, h2)
+    if "ln2_post" in p:
+        f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+    return x + f, new_cache
+
+
+def ssm_block(p, cfg: ModelConfig, x, ctx, cache):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx["mode"] == "decode":
+        a, new_state = ssm_mod.ssm_decode(p["ssm"], cfg, h, cache)
+    else:
+        a, new_state = ssm_mod.ssm_forward(p["ssm"], cfg, h)
+        new_state = new_state if ctx["mode"] == "prefill" else None
+        if new_state is not None:
+            new_state = {"h": new_state["h"].astype(cfg.cdtype), "conv": new_state["conv"]}
+    return x + a, new_state
+
+
+def init_ssm_block(cfg: ModelConfig, key):
+    return {"ln": init_rms(cfg.d_model), "ssm": ssm_mod.init_ssm(cfg, key)}
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2 + max(1, cfg.n_codebooks))
+    p = {}
+    if cfg.n_codebooks:
+        p["embed"] = jnp.stack([dense_init(ks[2 + i], (cfg.vocab, cfg.d_model), 0, cfg.cdtype)
+                                for i in range(cfg.n_codebooks)])
+        p["head"] = dense_init(ks[1], (cfg.n_codebooks, cfg.d_model, cfg.vocab), 1, cfg.cdtype)
+    else:
+        p["embed"] = dense_init(ks[0], (cfg.vocab, cfg.d_model), 1, cfg.cdtype)
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), 0, cfg.cdtype)
+    if cfg.d_vision:
+        p["img_proj"] = dense_init(ks[0], (cfg.d_vision, cfg.d_model), 0, cfg.cdtype)
+    return p
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens):
+    if cfg.n_codebooks:  # tokens (B, S, ncb): sum of per-codebook embeddings
+        return sum(jnp.take(p["embed"][n], tokens[..., n], axis=0)
+                   for n in range(cfg.n_codebooks))
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def logits_head(p, cfg: ModelConfig, x):
+    if cfg.n_codebooks:
+        return jnp.einsum("bsd,ndv->bsnv", x, p["head"])
+    if cfg.tie_embeddings:
+        return x @ p["embed"].T
+    return x @ p["head"]
+
+
+# ---------------------------------------------------------------------------
+# per-family parameter init
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key):
+    k_emb, k_blocks, k_extra = jax.random.split(key, 3)
+    p = {"embed": init_embed(cfg, k_emb), "final_norm": init_rms(cfg.d_model)}
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        p["layers"] = _stack_init(lambda k: init_attn_mlp_block(cfg, k), k_blocks, cfg.n_layers)
+    elif fam == "moe":
+        p["layers"] = _stack_init(lambda k: init_attn_mlp_block(cfg, k, use_moe=True),
+                                  k_blocks, cfg.n_layers)
+    elif fam == "ssm":
+        p["layers"] = _stack_init(lambda k: {"rwkv": rwkv_mod.init_rwkv(cfg, k)},
+                                  k_blocks, cfg.n_layers)
+    elif fam == "hybrid":
+        n_main = (cfg.n_layers // cfg.shared_attn_every) * cfg.shared_attn_every
+        n_super = n_main // cfg.shared_attn_every
+        p["m_main"] = _stack_init(
+            lambda k: _stack_init(lambda k2: init_ssm_block(cfg, k2), k, cfg.shared_attn_every),
+            k_blocks, n_super)
+        n_tail = cfg.n_layers - n_main
+        if n_tail:
+            p["m_tail"] = _stack_init(lambda k: init_ssm_block(cfg, k),
+                                      jax.random.fold_in(k_blocks, 7), n_tail)
+        p["shared_attn"] = _stack_init(lambda k: init_attn_mlp_block(cfg, k),
+                                       k_extra, cfg.n_shared_attn)
+    elif fam == "vlm":
+        period = cfg.cross_attn_every
+        n_super = cfg.n_layers // period
+        p["self_layers"] = _stack_init(
+            lambda k: _stack_init(lambda k2: init_attn_mlp_block(cfg, k2), k, period - 1),
+            k_blocks, n_super)
+        p["cross_layers"] = _stack_init(lambda k: init_attn_mlp_block(cfg, k, cross=True),
+                                        k_extra, n_super)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Decode cache pytree (concrete zeros). Use jax.eval_shape for specs."""
+    fam = cfg.family
+    rep = lambda f, n: jax.vmap(lambda _: f())(jnp.arange(n))
+    if fam in ("dense", "moe", "audio"):
+        return {"kv": rep(lambda: attn.init_kv_cache(cfg, batch, cache_len), cfg.n_layers)}
+    if fam == "ssm":
+        return {"state": rep(lambda: rwkv_mod.init_rwkv_state(cfg, batch), cfg.n_layers)}
+    if fam == "hybrid":
+        n_main = (cfg.n_layers // cfg.shared_attn_every) * cfg.shared_attn_every
+        n_super = n_main // cfg.shared_attn_every
+        n_tail = cfg.n_layers - n_main
+        c = {
+            "m_main": rep(lambda: rep(lambda: ssm_mod.init_ssm_state(cfg, batch),
+                                      cfg.shared_attn_every), n_super),
+            "attn_kv": rep(lambda: attn.init_kv_cache(cfg, batch, cache_len), n_super),
+        }
+        if n_tail:
+            c["m_tail"] = rep(lambda: ssm_mod.init_ssm_state(cfg, batch), n_tail)
+        return c
+    if fam == "vlm":
+        period = cfg.cross_attn_every
+        n_super = cfg.n_layers // period
+        return {
+            "self_kv": rep(lambda: rep(lambda: attn.init_kv_cache(cfg, batch, cache_len),
+                                       period - 1), n_super),
+            "cross_kv": rep(lambda: {
+                "k": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd), cfg.cdtype),
+                "v": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd), cfg.cdtype),
+            }, n_super),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_windows(cfg: ModelConfig):
+    """Per-layer attention window (0 = unlimited), gemma2-style alternation."""
+    if cfg.attn_pattern == "local_global" and cfg.local_window:
+        w = jnp.arange(cfg.n_layers) % 2 == 0
+        return jnp.where(w, cfg.local_window, 0).astype(jnp.int32)
+    if cfg.decode_window:
+        return jnp.full((cfg.n_layers,), cfg.decode_window, jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+def _constrain(x, ctx):
+    """Sequence-shard the residual stream over `model` during training:
+    keeps the per-layer scan carries (the remat save points) at 1/n_model
+    of the full activation — the difference between fitting v5e HBM or
+    not for the 100B+ dense archs (DESIGN.md §6)."""
+    spec = ctx.get("resid_spec")
+    if spec is not None:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+def _scan_stack(body, x, xs, cfg: ModelConfig, remat: bool):
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    ys = (jax.tree.map(lambda *a: jnp.stack(a), *ys) if ys[0] is not None else None)
+    return x, ys
+
+
+def forward(params, cfg: ModelConfig, tokens, *, mode: str = "train",
+            cache=None, t=None, img_emb=None, mesh=None, batch_axes=("data",),
+            cache_len: int = 0, seq_shard_resid: bool = True,
+            last_only: bool = False):
+    """Returns (logits, new_cache).
+
+    tokens: (B, S) int32 (or (B, S, ncb) for audio). For decode, S == 1 and
+    `t` is the scalar absolute position; `cache` is the decode cache.
+    """
+    B, S = tokens.shape[:2]
+    x = embed_tokens(params["embed"], cfg, tokens)
+    if img_emb is not None and "img_proj" in params["embed"]:
+        img_emb = img_emb.astype(cfg.cdtype) @ params["embed"]["img_proj"]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    resid_spec = None
+    if (seq_shard_resid and mesh is not None and mode == "train"
+            and "model" in mesh.shape and S % mesh.shape["model"] == 0 and S > mesh.shape["model"]):
+        from jax.sharding import NamedSharding, PartitionSpec
+        resid_spec = NamedSharding(
+            mesh, PartitionSpec(tuple(batch_axes) if batch_axes else None, "model", None))
+    ctx = {"mode": mode, "positions": positions, "t": t, "img_emb": img_emb,
+           "mesh": mesh, "batch_axes": batch_axes, "resid_spec": resid_spec,
+           "cache_len": cache_len or (cfg.decode_window or S)}
+    remat = mode == "train"
+    fam = cfg.family
+    new_cache = None
+
+    if fam in ("dense", "moe", "audio"):
+        windows = _layer_windows(cfg)
+        use_moe = fam == "moe"
+
+        def body(h, xs_l):
+            p_l, win, cache_l = xs_l
+            c = dict(ctx, window=win)
+            h, cache_out = attn_mlp_block(p_l, cfg, h, c, cache_l, use_moe=use_moe)
+            return _constrain(h, ctx), cache_out
+
+        cache_kv = cache["kv"] if cache is not None else None
+        x, kv_out = _scan_stack(body, x, (params["layers"], windows, cache_kv), cfg, remat)
+        if mode in ("prefill", "decode"):
+            new_cache = {"kv": kv_out}
+        elif use_moe and kv_out is not None:
+            new_cache = jnp.mean(kv_out)  # per-layer-mean router aux loss
+
+    elif fam == "ssm":
+        def body(h, xs_l):
+            p_l, cache_l = xs_l
+            if mode == "decode":
+                h, st = rwkv_mod.rwkv_decode(p_l["rwkv"], cfg, h, cache_l)
+            else:
+                h, st = rwkv_mod.rwkv_forward(p_l["rwkv"], cfg, h, cache_l)
+                if mode == "train":
+                    st = None
+            return _constrain(h, ctx), st
+
+        states = cache["state"] if cache is not None else None
+        x, st_out = _scan_stack(body, x, (params["layers"], states), cfg, remat)
+        if mode in ("prefill", "decode"):
+            new_cache = {"state": st_out}
+
+    elif fam == "hybrid":
+        def m_body(h, xs_l):
+            p_l, cache_l = xs_l
+            h, st = ssm_block(p_l, cfg, h, ctx, cache_l)
+            return _constrain(h, ctx), st
+
+        def super_body(h, xs_s):
+            p_s, attn_p_idx, kv_l, m_caches = xs_s
+            h, m_out = _scan_stack(m_body, h, (p_s, m_caches), cfg, remat)
+            ap = jax.tree.map(lambda a: a[attn_p_idx % cfg.n_shared_attn], params["shared_attn"])
+            c = dict(ctx, window=jnp.int32(cfg.decode_window))
+            h, kv_out = attn_mlp_block(ap, cfg, h, c, kv_l)
+            return h, (m_out, kv_out)
+
+        n_super = jax.tree_util.tree_leaves(params["m_main"])[0].shape[0]
+        kv_stack = cache["attn_kv"] if cache is not None else None
+        m_stack = cache["m_main"] if cache is not None else None
+        idxs = jnp.arange(n_super, dtype=jnp.int32)
+        x, (m_out, kv_out) = _scan_stack(super_body, x,
+                                         (params["m_main"], idxs, kv_stack, m_stack),
+                                         cfg, remat)
+        tail_out = None
+        if "m_tail" in params:
+            tails = cache["m_tail"] if cache is not None else None
+            x, tail_out = _scan_stack(m_body, x, (params["m_tail"], tails), cfg, remat)
+        if mode in ("prefill", "decode"):
+            new_cache = {"m_main": m_out, "attn_kv": kv_out}
+            if tail_out is not None:
+                new_cache["m_tail"] = tail_out
+
+    elif fam == "vlm":
+        def self_body(h, xs_l):
+            p_l, cache_l = xs_l
+            h, kv = attn_mlp_block(p_l, cfg, h, ctx, cache_l)
+            return _constrain(h, ctx), kv
+
+        def super_body(h, xs_s):
+            p_self, p_cross, self_kv, cross_kv = xs_s
+            h, self_out = _scan_stack(self_body, h, (p_self, self_kv), cfg, remat)
+            h, cross_out = attn_mlp_block(p_cross, cfg, h, ctx, cross_kv, cross=True)
+            return h, (self_out, cross_out)
+
+        self_kv = cache["self_kv"] if cache is not None else None
+        cross_kv = cache["cross_kv"] if cache is not None else None
+        x, (self_out, cross_out) = _scan_stack(
+            super_body, x, (params["self_layers"], params["cross_layers"], self_kv, cross_kv),
+            cfg, remat)
+        if mode in ("prefill", "decode"):
+            new_cache = {"self_kv": self_out, "cross_kv": cross_out}
+
+    else:
+        raise ValueError(fam)
+
+    if last_only:
+        # §Perf iteration A: the unembedding matmul is 2 B S d V FLOPs and
+        # its (B, S, V) output dwarfs everything else in prefill; serving
+        # only needs the final position.
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params["embed"], cfg, x)
+    return logits, new_cache

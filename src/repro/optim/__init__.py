@@ -1,0 +1,2 @@
+from .optimizers import adafactor, adamw, make_optimizer, momentum, sgd  # noqa: F401
+from .schedules import constant, cosine, warmup_cosine  # noqa: F401

@@ -1,0 +1,151 @@
+"""Optimizers (no optax dependency): SGD, momentum, AdamW, Adafactor.
+
+API: opt = make_optimizer(name, **hp); state = opt.init(params);
+new_params, new_state = opt.update(grads, state, params, lr).
+
+AdamW keeps fp32 moments (sharded like the params under FSDP). Adafactor
+factors the second moment over the last two dims — the production choice
+for the >200B assigned architectures where full AdamW state would not fit
+a v5e slice (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+# §Perf iteration G: stacked-layer param leaves are updated one layer at a
+# time (lax.map over the leading axis) above this size — keeps the fp32
+# update intermediates at 1/L of the leaf instead of materializing fp32
+# copies of whole (L, ...) expert stacks (measured: the dominant HBM temp
+# on the 235B/480B MoE train steps). Also gives per-matrix Adafactor clip
+# semantics, matching the original paper.
+_LAYERWISE_BYTES = 64 * 1024 * 1024
+
+
+def _maybe_layerwise(fn, p, *rest):
+    if p.ndim >= 3 and p.size * 4 > _LAYERWISE_BYTES:
+        return jax.lax.map(lambda args: fn(*args), (p, *rest))
+    return fn(p, *rest)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        new = _tmap(lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                    params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        m = _tmap(lambda m_, g: beta * m_ + g.astype(jnp.float32), state["m"], grads)
+        new = _tmap(lambda p, m_: (p.astype(jnp.float32) - lr * m_).astype(p.dtype), params, m)
+        return new, {"m": m, "step": state["step"] + 1}
+
+    return Optimizer("momentum", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": _tmap(z, params), "v": _tmap(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["step"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd_one(p, g, m_, v_):
+            g32 = g.astype(jnp.float32)
+            m_ = b1 * m_ + (1 - b1) * g32
+            v_ = b2 * v_ + (1 - b2) * jnp.square(g32)
+            step = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            out = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+            return out.astype(p.dtype), m_, v_
+
+        out = _tmap(lambda p, g, m_, v_: _maybe_layerwise(upd_one, p, g, m_, v_),
+                    params, grads, state["m"], state["v"])
+        # out is a tree of (new_p, m, v) tuples; split it
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        outs = treedef.flatten_up_to(out)
+        new_p = treedef.unflatten([o[0] for o in outs])
+        m = treedef.unflatten([o[1] for o in outs])
+        v = treedef.unflatten([o[2] for o in outs])
+        return new_p, {"m": m, "v": v, "step": t}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(decay: float = 0.99, eps: float = 1e-30, clip: float = 1.0) -> Optimizer:
+    """Factored second moment over the last two dims for rank>=2 leaves."""
+
+    def init(params):
+        def zfac(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"f": _tmap(zfac, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["step"] + 1
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                r = decay * f["r"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                c = decay * f["c"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(r[..., None] * c[..., None, :]
+                                 / (jnp.mean(r, axis=-1, keepdims=True)[..., None] + eps))
+                newf = {"r": r, "c": c}
+            else:
+                v = decay * f["v"] + (1 - decay) * g2
+                denom = jnp.sqrt(v)
+                newf = {"v": v}
+            step = g / (denom + eps)
+            norm = jnp.sqrt(jnp.mean(jnp.square(step)))
+            step = step / jnp.maximum(1.0, norm / clip)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), newf
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_f = treedef.flatten_up_to(state["f"])
+        out = [_maybe_layerwise(upd, p, g, f)
+               for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_f = treedef.unflatten([o[1] for o in out])
+        return new_p, {"f": new_f, "step": t}
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, **hp) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw,
+            "adafactor": adafactor}[name](**hp)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules as simple callables of the (traced) step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    base = cosine(lr, max(1, total_steps - warmup), final_frac)
+
+    def f(step):
+        w = jnp.clip(step.astype(jnp.float32) / max(1, warmup), 0.0, 1.0)
+        return w * base(jnp.maximum(step - warmup, 0))
+    return f

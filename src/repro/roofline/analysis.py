@@ -1,0 +1,144 @@
+"""Three-term roofline analysis from the dry-run artifacts (§Roofline).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link. MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N_active
+for MoE; the MODEL_FLOPS/HLO ratio surfaces remat & dispatch overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_SUGGEST = {
+    "compute": "increase per-chip arithmetic intensity (reduce remat recompute, "
+               "fuse elementwise chains, larger per-device batch)",
+    "memory": "improve reuse (flash/blocked attention, fuse norm+matmul, "
+              "wider tiles so weights stream once per step)",
+    "collective": "reshard to cut cross-chip traffic (fewer all-gathers via "
+                  "head-aligned TP, overlap collectives with compute, "
+                  "reduce-scatter gradient fusion)",
+}
+
+
+def model_flops(cfg, shape, n_params: int) -> float:
+    """Analytic 'useful' FLOPs per step (global, not per-device)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = active_params(cfg, n_params)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def active_params(cfg, n_params: int) -> float:
+    """MoE: count experts at top_k/E utilization."""
+    if not cfg.n_experts:
+        return float(n_params)
+    expert_per_layer = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+    expert_total = expert_per_layer * cfg.n_layers
+    dense_rest = n_params - expert_total
+    return dense_rest + expert_total * cfg.top_k / cfg.n_experts
+
+
+BYTES_PER_SCORE_ELEM = 34.0  # measured: XLA unfused softmax(QK^T)V traffic
+
+
+def attention_score_elems(cfg, shape, n_devices: int) -> float:
+    """Dense-attention score elements per device per step (what the Pallas
+    flash kernel keeps in VMEM instead of HBM)."""
+    if cfg.family == "ssm" or shape.kind == "decode":
+        return 0.0
+    n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // max(1, cfg.shared_attn_every)
+    S = shape.seq_len
+    per_layer = shape.global_batch * cfg.n_heads * float(S) * S
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd + remat-fwd + bwd
+    return n_attn_layers * per_layer * mult / n_devices
+
+
+def flash_adjusted_bytes(rec, cfg, shape) -> float:
+    """Memory bytes with the flash_attention kernel: score traffic never
+    touches HBM (kernels/flash_attention); streaming qkv/out is negligible
+    next to it."""
+    byts = rec.get("bytes_per_device") or 0.0
+    saved = BYTES_PER_SCORE_ELEM * attention_score_elems(cfg, shape,
+                                                         rec["n_devices"])
+    return max(byts - saved, byts * 0.05)
+
+
+def roofline_terms(rec: dict) -> dict:
+    flops = rec.get("flops_per_device") or 0.0
+    byts = rec.get("bytes_per_device") or 0.0
+    coll = sum(rec.get("collective_bytes_per_device", {}).values())
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "suggest": _SUGGEST[dom],
+            "step_lower_bound_s": max(t_c, t_m, t_x)}
+
+
+def analyze_all(dryrun_dir=None, mesh="16x16"):
+    """Full roofline table for one mesh. Returns list of row dicts.
+    Defaults to the optimized sweep (results/dryrun2) when present,
+    falling back to the paper-faithful baseline sweep (results/dryrun)."""
+    if dryrun_dir is None:
+        dryrun_dir = ("results/dryrun2" if os.path.isdir("results/dryrun2")
+                      else "results/dryrun")
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, arch_for_shape
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec["mesh"] != mesh:
+            continue
+        cfg = arch_for_shape(get_config(rec["arch"]), SHAPES[rec["shape"]])
+        terms = roofline_terms(rec)
+        mf = model_flops(cfg, SHAPES[rec["shape"]], rec["n_params"])
+        hlo_global = (rec.get("flops_per_device") or 0.0) * rec["n_devices"]
+        mem_flash = flash_adjusted_bytes(rec, cfg, SHAPES[rec["shape"]]) / HBM_BW
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s",
+                                     "dominant", "step_lower_bound_s")},
+            "memory_flash_s": mem_flash,
+            "model_flops": mf,
+            "hlo_flops_global": hlo_global,
+            "useful_ratio": (mf / hlo_global) if hlo_global else None,
+            "hbm_gb_per_device": rec["memory"]["temp_bytes"] / 1e9,
+            "suggest": terms["suggest"],
+        })
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO | temp GB/dev |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"**{r['dominant']}** | {ur} | {r['hbm_gb_per_device']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    rows = analyze_all(mesh=mesh)
+    print(markdown_table(rows))

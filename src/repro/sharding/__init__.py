@@ -1,0 +1,2 @@
+from .rules import (cache_shardings, data_shardings, param_shardings,  # noqa: F401
+                    state_shardings)

@@ -1,0 +1,181 @@
+"""Logical sharding rules: param-path regex -> PartitionSpec for the
+TRAILING dims; leading stacked-layer dims are padded with None.
+
+Strategy (DESIGN.md §6): tensor-parallel over `model` on heads / d_ff /
+experts / vocab, FSDP over `data` on the complementary dim, batch over
+(`pod`, `data`). SSM/RWKV inner weights stay data-sharded only in the
+baseline (a deliberate, measured baseline — see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+def _rules(cfg, n_model: int):
+    """Sharding rules, HEAD-GRANULARITY AWARE: a projection's head axis is
+    sharded over `model` only when the head count divides the axis size —
+    sub-head sharding makes GSPMD insert per-layer activation all-gathers
+    (measured: +70 GB/step on llama3-8b train_4k before this guard)."""
+    q_ok = cfg is None or cfg.n_heads % n_model == 0
+    kv_ok = cfg is None or cfg.n_kv_heads % n_model == 0
+    # SSM head-parallel guard (§Perf iteration C): shard the d_inner /
+    # dt-head axes over `model` only at whole-head granularity
+    ssm_nh = 0
+    if cfg is not None and cfg.ssm_state:
+        ssm_nh = (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim
+    ssm_ok = ssm_nh > 0 and ssm_nh % n_model == 0
+    return [
+        # --- embeddings / heads ---
+        (r"embed/embed$", ("model", "data")),          # (V, d) or (ncb, V, d)
+        (r"embed/head$", ("data", "model")),           # (d, V) or (ncb, d, V)
+        (r"embed/img_proj$", (None, "data")),
+        # --- attention ---
+        (r"attn/wq$", ("data", "model" if q_ok else None)),
+        (r"attn/w[kv]$", ("data", "model" if kv_ok else None)),
+        (r"attn/wo$", ("model" if q_ok else None, "data")),
+        (r"attn/bq$", ("model" if q_ok else None,)),
+        (r"attn/b[kv]$", ("model" if kv_ok else None,)),
+        (r"attn/(q|k)_norm$", (None,)),
+        # --- MoE experts (leading E dim -> model = expert parallelism) ---
+        (r"ffn/router$", (None, None)),                # replicated for shard_map
+        (r"ffn/w[gu]$", ("model", "data", None)),      # (E, d, ff)
+        (r"ffn/wd$", ("model", None, "data")),         # (E, ff, d)
+        # --- dense MLP (also arctic's ffn/dense/*) ---
+        (r"w_gate$|w_up$", ("data", "model")),
+        (r"w_down$", ("model", "data")),
+        # --- RWKV time-mix: FSDP over data. (§Perf iteration J tried full
+        # replication to kill the per-layer fp32 activation all-reduces —
+        # measured a small REGRESSION (+3% collectives, +4 GB temp): the
+        # dominant traffic is the channel-mix psum + gathers, not the
+        # square projections. Reverted; 40 heads don't divide the 16-way
+        # model axis so head-parallel TP is not available on this mesh.) ---
+        (r"rwkv/w[rkvgo]$", ("data", None)),
+        (r"rwkv/cm_k$", ("data", "model")),
+        (r"rwkv/cm_v$", ("model", "data")),
+        (r"rwkv/w_[ab]$", (None, None)),
+        # --- Mamba2 (head-parallel TP when heads divide the model axis:
+        #     ONE psum per layer at out_proj, like Megatron attention) ---
+        (r"ssm/in_[zx]$", ("data", "model" if ssm_ok else None)),
+        (r"ssm/in_dt$", ("data", "model" if ssm_ok else None)),
+        (r"ssm/in_bc$", ("data", None)),
+        (r"ssm/out_proj$", ("model" if ssm_ok else None, "data")),
+        (r"ssm/conv_x$", (None, "model" if ssm_ok else None)),
+        (r"ssm/conv_xb$", ("model" if ssm_ok else None,)),
+        (r"ssm/norm$", ("model" if ssm_ok else None,)),
+        (r"ssm/(A_log|D|dt_bias)$", ("model" if ssm_ok else None,)),
+        (r"ssm/conv_bc", None),  # replicate (tiny)
+    ]
+
+
+def _spec_for(rules, path: str, ndim: int):
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if spec is None:
+                return P()
+            pad = ndim - len(spec)
+            if pad < 0:  # rank-1 leaf matched a rank-2 rule (e.g. scalars)
+                return P()
+            return P(*([None] * pad + list(spec)))
+    return P()  # norms, scalars, biases: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_shardings(mesh, params_shape, cfg=None):
+    """Map a params pytree (of ShapeDtypeStruct or arrays) to NamedShardings."""
+    rules = _rules(cfg, mesh.shape.get("model", 1))
+
+    def f(path, leaf):
+        return NamedSharding(mesh, _spec_for(rules, _path_str(path), len(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def state_shardings(mesh, opt_state_shape, params_shape, params_shardings):
+    """Optimizer state: moments shard like their param (matched by shape);
+    adafactor row/col factors inherit the reduced param spec; scalars
+    replicated."""
+    shape_to_spec = {}
+    for ps, sh in zip(jax.tree.leaves(params_shape), jax.tree.leaves(params_shardings)):
+        shape_to_spec.setdefault(tuple(ps.shape), sh.spec)
+
+    def f(leaf):
+        spec = shape_to_spec.get(tuple(leaf.shape))
+        if spec is None and len(leaf.shape) >= 1:
+            # adafactor row/col factors: reduce of a param over last/2nd-last dim
+            for pshape, pspec in shape_to_spec.items():
+                if tuple(leaf.shape) == pshape[:-1] and len(pspec) >= 2:
+                    spec = P(*pspec[:-1])
+                    break
+                if tuple(leaf.shape) == pshape[:-2] + pshape[-1:] and len(pspec) >= 2:
+                    spec = P(*(list(pspec[:-2]) + [pspec[-1]]))
+                    break
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree.map(f, opt_state_shape)
+
+
+def data_shardings(mesh, batch_axes_, spec_tree):
+    """Shard batch dim 0 over batch_axes_, everything else replicated."""
+    def f(leaf):
+        if len(leaf.shape) >= 1 and batch_axes_:
+            return NamedSharding(mesh, P(batch_axes_, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(f, spec_tree)
+
+
+def cache_shardings(mesh, cache_shape, batch_axes_, seq_axis_name="model"):
+    """Decode-cache shardings.
+
+    KV caches (L..., B, S, KV, hd): batch over batch_axes_ when divisible,
+    sequence dim over `model` (keeps 32k/500k caches inside a v5e slice).
+    SSM/RWKV states (L..., B, ...): batch over batch_axes_ only.
+    """
+    # batch-dim position measured from the END of the shape, by leaf path
+    state_batch_from_end = [
+        (r"state/s$", 4),            # (L, B, nh, K, V)
+        (r"state/last_(tm|cm)$", 2),  # (L, B, d)
+        (r"/h$", 4),                 # mamba (.., B, nh, hd, ds)
+        (r"/conv$", 3),              # mamba (.., B, K-1, C)
+    ]
+
+    def f(path, leaf):
+        path_s = _path_str(path)
+        nd = len(leaf.shape)
+        if path_s.endswith("/pos") or nd < 2:
+            return NamedSharding(mesh, P())
+        if re.search(r"(kv|attn_kv|self_kv|cross_kv)/(k|v)$", path_s):
+            n_lead = nd - 4  # stacked layer dims
+            b_ok = bool(batch_axes_) and leaf.shape[n_lead] % _axes_size(mesh, batch_axes_) == 0
+            seq = leaf.shape[n_lead + 1]
+            seq_ok = seq % mesh.shape[seq_axis_name] == 0 and seq >= 2 * mesh.shape[seq_axis_name]
+            spec = ([None] * n_lead
+                    + [batch_axes_ if b_ok else None]
+                    + [seq_axis_name if seq_ok else None, None, None])
+            return NamedSharding(mesh, P(*spec))
+        for pat, from_end in state_batch_from_end:
+            if re.search(pat, path_s) and batch_axes_:
+                bpos = nd - from_end
+                if bpos >= 0 and leaf.shape[bpos] % _axes_size(mesh, batch_axes_) == 0:
+                    spec = [None] * nd
+                    spec[bpos] = batch_axes_
+                    return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def _axes_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

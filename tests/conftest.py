@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see the ONE real CPU device (dry-run sets its own XLA_FLAGS in a
+# subprocess); keep any preexisting flags out of the way.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

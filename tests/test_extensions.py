@@ -1,0 +1,80 @@
+"""Beyond-paper extensions (the paper's own §VI/§VII future-work items):
+clustered gossip and dynamic per-sample ensemble selection."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamic import des_accuracy, dynamic_ensemble_predict, knn_competence
+from repro.fl.clustering import (ClusterState, clustering_savings,
+                                 pruned_topology)
+
+
+def test_cluster_state_and_pruned_topology():
+    st = ClusterState.init(6)
+    st.update(0, [1, 1, 2])   # client 0 keeps selecting peers 1, 2
+    st.update(0, [1])
+    st.update(3, [4])
+    topo = pruned_topology(st, explore=1, seed=0)
+    assert 1 in topo[0] and 2 in topo[0]
+    assert 4 in topo[3]
+    assert all(c not in topo[c] for c in range(6))
+    # exploration adds at most 1 outsider beyond preferred peers
+    assert len(topo[0]) <= 3
+
+
+def test_clustering_saves_communication():
+    st = ClusterState.init(10)
+    for c in range(10):
+        st.update(c, [(c + 1) % 10])  # everyone prefers one peer
+    sav = clustering_savings(st, explore=1)
+    # full graph has 9 peers/client; pruned has ~2 -> ~75%+ saved
+    assert sav > 0.6
+
+
+def test_dynamic_selection_beats_static_on_bimodal_client():
+    """Client whose test distribution has two modes, each covered by a
+    DIFFERENT specialist model: per-sample selection must beat the static
+    mean-prob ensemble of both."""
+    rng = np.random.default_rng(0)
+    V, T, C = 400, 200, 4
+    # inputs: mode A = positive features, mode B = negative
+    x_val = np.concatenate([rng.normal(2, 1, (V // 2, 8)),
+                            rng.normal(-2, 1, (V // 2, 8))]).astype(np.float32)
+    y_val = rng.integers(0, C, V)
+    x_te = np.concatenate([rng.normal(2, 1, (T // 2, 8)),
+                           rng.normal(-2, 1, (T // 2, 8))]).astype(np.float32)
+    y_te = rng.integers(0, C, T)
+    is_a_val = np.arange(V) < V // 2
+    is_a_te = np.arange(T) < T // 2
+
+    def specialist(good_mask_val, good_mask_te):
+        pv = np.full((V, C), 1.0 / C, np.float32)
+        pt = np.full((T, C), 1.0 / C, np.float32)
+        pv[good_mask_val] = np.eye(C, dtype=np.float32)[y_val[good_mask_val]]
+        pt[good_mask_te] = np.eye(C, dtype=np.float32)[y_te[good_mask_te]]
+        # wrong on the other mode (worse than chance)
+        bad_v, bad_t = ~good_mask_val, ~good_mask_te
+        pv[bad_v] = np.eye(C, dtype=np.float32)[(y_val[bad_v] + 1) % C]
+        pt[bad_t] = np.eye(C, dtype=np.float32)[(y_te[bad_t] + 1) % C]
+        return pv, pt
+
+    pvA, ptA = specialist(is_a_val, is_a_te)
+    pvB, ptB = specialist(~is_a_val, ~is_a_te)
+    probs_val = jnp.asarray(np.stack([pvA, pvB]))
+    probs_te = jnp.asarray(np.stack([ptA, ptB]))
+
+    des = float(des_accuracy(jnp.asarray(x_te), jnp.asarray(y_te),
+                             jnp.asarray(x_val), jnp.asarray(y_val),
+                             probs_val, probs_te, K=9, k=1))
+    static = float(np.mean(np.argmax(np.asarray(probs_te).mean(0), -1) == y_te))
+    assert des > 0.95
+    assert des > static + 0.2
+
+
+def test_knn_competence_shapes():
+    rng = np.random.default_rng(1)
+    comp = knn_competence(jnp.asarray(rng.normal(size=(5, 6)).astype(np.float32)),
+                          jnp.asarray(rng.normal(size=(20, 6)).astype(np.float32)),
+                          jnp.asarray((rng.random((3, 20)) < 0.5).astype(np.float32)),
+                          K=4)
+    assert comp.shape == (5, 3)
+    assert float(comp.min()) >= 0 and float(comp.max()) <= 1

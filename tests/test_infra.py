@@ -1,0 +1,133 @@
+"""Infrastructure tests: checkpoint roundtrip, optimizers, sharding rules,
+data pipeline, multi-device MoE numerics (subprocess with fake devices)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore, load_pytree, save_pytree
+from repro.optim import make_optimizer
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": [jnp.ones(3), {"c": jnp.zeros((2,), jnp.int32)}],
+            "d": None}
+    p = str(tmp_path / "x.npz")
+    save_pytree(p, tree, metadata={"arch": "llama3-8b", "step": 7})
+    back, meta = load_pytree(p)
+    assert meta == {"arch": "llama3-8b", "step": 7}
+    assert back["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    assert isinstance(back["b"], list) and back["b"][1]["c"].dtype == jnp.int32
+    assert back["d"] is None
+
+
+def test_checkpoint_store_publish_fetch(tmp_path):
+    store = CheckpointStore(str(tmp_path / "store"))
+    store.publish("client0_model1", {"w": jnp.ones((4, 4))}, {"owner": 0})
+    assert store.exists("client0_model1")
+    tree, meta = store.fetch("client0_model1")
+    assert meta["owner"] == 0
+    assert store.list() == ["client0_model1"]
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw", "adafactor"])
+def test_optimizers_decrease_quadratic(name):
+    opt = make_optimizer(name)
+    params = {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array(4.0)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.float32(0.05))
+    assert float(loss(params)) < 0.25 * l0, name
+
+
+def test_param_sharding_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke
+    from repro.models import transformer as tf
+    from repro.sharding import param_shardings
+    cfg = get_smoke("llama3-8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shapes = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    sh = param_shardings(mesh, shapes, cfg)
+    # attention q: stacked (L, d, H*hd) -> (None, data, model) (heads divide 1)
+    assert sh["layers"]["attn"]["wq"].spec == P(None, "data", "model")
+    assert sh["layers"]["attn"]["wo"].spec == P(None, "model", "data")
+    assert sh["embed"]["embed"].spec == P("model", "data")
+    assert sh["final_norm"].spec == P()
+
+
+def test_param_sharding_head_granularity_guard():
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.sharding import param_shardings
+    cfg = get_config("llama3-8b")  # kv=8 < 16-way model axis
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    # emulate 16-way model axis via rules function directly
+    from repro.sharding.rules import _rules, _spec_for
+    rules = _rules(cfg, 16)
+    assert _spec_for(rules, "layers/attn/wk", 3) == P(None, "data", None)
+    assert _spec_for(rules, "layers/attn/wq", 3) == P(None, "data", "model")
+
+
+def test_token_pipeline_shapes():
+    from repro.data import TokenPipeline
+    it = iter(TokenPipeline(vocab=64, batch=2, seq=16, seed=0))
+    b = next(it)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    assert b["tokens"].max() < 64
+    # audio variant
+    it = iter(TokenPipeline(vocab=32, batch=2, seq=8, n_codebooks=4))
+    b = next(it)
+    assert b["tokens"].shape == (2, 8, 4)
+
+
+def test_moe_shard_map_grads_match_local_subprocess():
+    """Run the 8-fake-device MoE fwd/grad equivalence check in a subprocess
+    (device count must be set before jax init)."""
+    code = """
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke
+from repro.models import moe as moe_mod
+cfg = get_smoke('qwen3-moe-235b-a22b').replace(dtype='float32', capacity_factor=8.0, n_experts=8)
+key = jax.random.PRNGKey(1)
+p = moe_mod.init_moe(cfg, key)
+x = jax.random.normal(key, (4, 16, cfg.d_model), jnp.float32)
+def loss_local(p, x):
+    return jnp.sum(moe_mod.moe_ffn(p, cfg, x) ** 2)
+l0, g0 = jax.value_and_grad(loss_local)(p, x)
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+def loss_mesh(p, x):
+    return jnp.sum(moe_mod.moe_ffn(p, cfg, x, mesh=mesh, batch_axes=('data',)) ** 2)
+with mesh:
+    l1, g1 = jax.jit(jax.value_and_grad(loss_mesh))(p, x)
+assert abs(float(l0) - float(l1)) / abs(float(l0)) < 1e-4
+for k in ['router', 'wg', 'wu', 'wd']:
+    err = float(jnp.max(jnp.abs(g0[k] - g1[k])))
+    scale = float(jnp.max(jnp.abs(g0[k]))) + 1e-9
+    assert err / scale < 1e-4, (k, err, scale)
+print('OK')
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,41 @@
+"""ops.py wrapper tests: padding correctness for non-chunk-multiple
+sequence lengths (state must be exact through padding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.wkv_scan.ops import wkv_scan
+from repro.kernels.wkv_scan.ref import wkv_scan_ref
+
+
+def test_ssd_ops_padding():
+    key = jax.random.PRNGKey(0)
+    Bb, S, nh, hd, ds = 2, 200, 2, 32, 16  # 200 not a chunk multiple
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bb, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, nh)))
+    A_log = jax.random.normal(ks[2], (nh,)) * 0.5
+    B = jax.random.normal(ks[3], (Bb, S, ds))
+    C = jax.random.normal(ks[4], (Bb, S, ds))
+    D = jnp.ones((nh,))
+    y1, h1 = ssd_scan(x, dt, A_log, B, C, D)
+    y0, h0 = ssd_scan_ref(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), atol=2e-3, rtol=1e-3)
+
+
+def test_wkv_ops_padding():
+    key = jax.random.PRNGKey(1)
+    B, S, nh, hd = 2, 100, 2, 32  # 100 not a chunk multiple
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, nh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, nh, hd), jnp.float32)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, nh, hd)) - 1.0)
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.3
+    y1, s1 = wkv_scan(r, k, v, logw, u)
+    y0, s0 = wkv_scan_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), atol=2e-3, rtol=1e-3)

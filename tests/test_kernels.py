@@ -1,0 +1,102 @@
+"""Per-kernel correctness: shape/dtype sweeps, assert_allclose vs the
+pure-jnp ref.py oracle, interpret mode (CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ensemble_fitness.kernel import ensemble_fitness
+from repro.kernels.ensemble_fitness.ref import ensemble_fitness_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.wkv_scan.kernel import wkv_scan
+from repro.kernels.wkv_scan.ref import wkv_scan_ref
+
+
+@pytest.mark.parametrize("P,M", [(100, 50), (256, 128), (37, 200), (1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ensemble_fitness(P, M, dtype):
+    key = jax.random.PRNGKey(P * M)
+    pop = (jax.random.uniform(key, (P, M)) < 0.3).astype(dtype)
+    acc = jax.random.uniform(key, (M,), dtype)
+    S = jax.random.uniform(key, (M, M), dtype)
+    S = (S + S.T) / 2
+    s1, d1 = ensemble_fitness(pop, acc, S, interpret=True)
+    s0, d0 = ensemble_fitness_ref(pop, acc, S)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d0), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,hd", [
+    (2, 4, 4, 256, 256, 64),
+    (1, 8, 2, 128, 384, 64),
+    (1, 4, 1, 64, 64, 32),
+    (1, 2, 2, 1, 256, 64),     # decode
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, H, KV, Sq, Sk, hd, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, Sk, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, Sk, hd), dtype)
+    o1 = flash_attention(q, k, v, interpret=True)
+    o0 = flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o0, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (64, 0.0), (0, 30.0), (32, 50.0)])
+def test_flash_attention_variants(window, softcap):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 2, 256, 64), jnp.float32)
+    o1 = flash_attention(q, k, v, window=window, softcap=softcap, interpret=True)
+    o0 = flash_attention_ref(q, k, v, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o0), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("Bb,S,nh,hd,ds,chunk", [
+    (2, 256, 4, 64, 64, 128),
+    (1, 128, 2, 32, 16, 64),
+    (2, 512, 3, 64, 64, 128),
+])
+def test_ssd_scan(Bb, S, nh, hd, ds, chunk):
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bb, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, nh)))
+    A_log = jax.random.normal(ks[2], (nh,)) * 0.5
+    B = jax.random.normal(ks[3], (Bb, S, ds))
+    C = jax.random.normal(ks[4], (Bb, S, ds))
+    D = jnp.ones((nh,))
+    y1, h1 = ssd_scan(x, dt, A_log, B, C, D, chunk=chunk, interpret=True)
+    y0, h0 = ssd_scan_ref(x, dt, A_log, B, C, D)
+    scale = float(jnp.max(jnp.abs(y0))) + 1e-6
+    assert float(jnp.max(jnp.abs(y1 - y0))) / scale < 1e-5
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,nh,hd,chunk", [
+    (2, 128, 4, 64, 64),
+    (1, 256, 2, 32, 64),
+    (2, 192, 3, 64, 32),
+])
+def test_wkv_scan(B, S, nh, hd, chunk):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, nh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, nh, hd), jnp.float32)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, nh, hd)) - 1.0)
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.3
+    y1, s1 = wkv_scan(r, k, v, logw, u, chunk=chunk, interpret=True)
+    y0, s0 = wkv_scan_ref(r, k, v, logw, u)
+    scale = float(jnp.max(jnp.abs(y0))) + 1e-6
+    assert float(jnp.max(jnp.abs(y1 - y0))) / scale < 1e-5
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), atol=1e-3, rtol=1e-3)

@@ -1,0 +1,107 @@
+"""Launcher-layer tests: probe-plan structure preservation, roofline math,
+shapes/input_specs, serve path, trainer loss decrease."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke, list_archs
+from repro.launch.shapes import SHAPES, arch_for_shape, input_specs
+
+
+def test_probe_plan_reconstructs_depth():
+    from repro.launch.dryrun import probe_plan
+    for arch in list_archs():
+        cfg = get_config(arch)
+        L1, L2, k = probe_plan(cfg)
+        # linear extrapolation must hit the exact full depth in "units"
+        assert L1 + k * (L2 - L1) == cfg.n_layers, arch
+        assert L1 >= 1 and L2 > L1
+
+
+def test_input_specs_all_combinations_shapes():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for name, shape in SHAPES.items():
+            specs = input_specs(cfg, shape)
+            tok = specs["tokens"]
+            if shape.kind == "decode":
+                assert tok.shape[1] == 1
+                assert "cache" in specs
+                acfg = arch_for_shape(cfg, shape)
+                if acfg.decode_window:
+                    # windowed cache is capped
+                    kv = [l for l in jax.tree.leaves(specs["cache"])
+                          if l.shape and len(l.shape) >= 4]
+                    assert all(s <= acfg.decode_window
+                               for l in kv for s in [l.shape[-3]] if l.ndim >= 4)
+            else:
+                assert tok.shape[:2] == (shape.global_batch, shape.seq_len)
+            if cfg.family == "vlm" and shape.kind != "decode":
+                assert "img_emb" in specs
+
+
+def test_long_500k_subquadratic_cache_is_small():
+    """long_500k must not allocate 500k-length caches for quadratic archs
+    (window cap) while SSM state is O(1)."""
+    cfg = arch_for_shape(get_config("llama3-8b"), SHAPES["long_500k"])
+    specs = input_specs(get_config("llama3-8b"), SHAPES["long_500k"])
+    total = sum(np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(specs["cache"]))
+    assert total < 3e9, "windowed cache should be << full 500k cache"
+    s2 = input_specs(get_config("rwkv6-3b"), SHAPES["long_500k"])
+    t2 = sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(s2["state"] if "state" in s2 else s2["cache"]))
+    assert t2 < 2e9
+
+
+def test_roofline_terms_math():
+    from repro.roofline.analysis import roofline_terms, PEAK_FLOPS, HBM_BW, LINK_BW
+    rec = {"flops_per_device": PEAK_FLOPS, "bytes_per_device": HBM_BW,
+           "collective_bytes_per_device": {"all-gather": LINK_BW}}
+    t = roofline_terms(rec)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
+    assert t["step_lower_bound_s"] == 1.0
+
+
+def test_active_params_moe():
+    from repro.roofline.analysis import active_params
+    cfg = get_config("qwen3-moe-235b-a22b")
+    n = 235_093_634_048  # measured
+    a = active_params(cfg, n)
+    assert 15e9 < a < 40e9  # ~22B active
+
+
+def test_serve_batch_single_and_ensemble():
+    from repro.launch.serve import serve_batch
+    cfg = get_smoke("llama3-8b")
+    key = jax.random.PRNGKey(0)
+    from repro.models import transformer as tf
+    params = [tf.init_params(cfg, jax.random.fold_in(key, i)) for i in range(2)]
+    prompts = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    out1 = serve_batch(cfg, params[:1], prompts, gen_len=4)
+    out2 = serve_batch(cfg, params, prompts, gen_len=4)
+    assert out1.shape == (2, 4) and out2.shape == (2, 4)
+    assert int(out1.max()) < cfg.vocab
+
+
+def test_trainer_loss_decreases():
+    from repro.launch.train import train
+    _, losses, _ = train("qwen2.5-3b", "smoke", steps=25, batch=4, seq=64,
+                         log_every=100)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+      %ag = bf16[16,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+      %ar = f32[64]{0} all-reduce(%y), replica_groups={{0,1}}
+      %rs = f32[8,8]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3}}
+    """
+    out, counts = parse_collectives(hlo, default_group=4)
+    assert counts["all-gather"] == 1 and counts["all-reduce"] == 1
+    assert out["all-gather"] == 16 * 128 * 2
+    assert out["all-reduce"] == 64 * 4 * 2
+    assert out["reduce-scatter"] == 8 * 8 * 4 * 3  # (g-1) factor

@@ -1,0 +1,142 @@
+"""Model-layer behaviour tests: decode==full-forward consistency, GQA==MHA
+degenerate case, chunked-scan vs naive recurrence equivalence, MoE
+capacity semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig, apply_rope
+from repro.models import ssm as ssm_mod
+from repro.models import rwkv as rwkv_mod
+
+CONSISTENCY_ARCHS = ["llama3-8b", "rwkv6-3b", "zamba2-7b", "gemma2-27b",
+                     "musicgen-medium", "llama-3.2-vision-11b"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke(arch).replace(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = tf.init_params(cfg, key)
+    S = 33
+    shp = (2, S, cfg.n_codebooks) if cfg.n_codebooks else (2, S)
+    toks = jax.random.randint(key, shp, 0, cfg.vocab)
+    img = (jax.random.normal(key, (2, cfg.n_img_tokens, cfg.d_vision))
+           if cfg.family == "vlm" else None)
+    full, _ = tf.forward(p, cfg, toks, mode="train", img_emb=img)
+    _, cache = tf.forward(p, cfg, toks[:, :S - 1], mode="prefill",
+                          img_emb=img, cache_len=64)
+    lg, _ = tf.forward(p, cfg, toks[:, S - 1:S], mode="decode", cache=cache,
+                       t=jnp.int32(S - 1), img_emb=img)
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(lg[:, 0]),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_moe_decode_matches_with_headroom():
+    """With ample capacity the MoE decode path is exact; with tight
+    capacity only drops are allowed (never garbage)."""
+    cfg = get_smoke("qwen3-moe-235b-a22b").replace(dtype="float32",
+                                                   capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = tf.init_params(cfg, key)
+    S = 17
+    toks = jax.random.randint(key, (2, S), 0, cfg.vocab)
+    full, _ = tf.forward(p, cfg, toks, mode="train")
+    _, cache = tf.forward(p, cfg, toks[:, :S - 1], mode="prefill", cache_len=32)
+    lg, _ = tf.forward(p, cfg, toks[:, S - 1:S], mode="decode", cache=cache,
+                       t=jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(lg[:, 0]),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_gqa_equals_mha_when_kv_equals_heads():
+    from repro.models import attention as attn
+    cfg = ModelConfig(d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                      vocab=64, dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attn(cfg, key)
+    x = jax.random.normal(key, (2, 16, 64), jnp.float32)
+    pos = jnp.arange(16, dtype=jnp.int32)
+    out, _ = attn.attn_forward(p, cfg, x, pos)
+    # brute-force MHA with the same weights
+    q = (x @ p["wq"]).reshape(2, 16, 4, 16)
+    k = (x @ p["wk"]).reshape(2, 16, 4, 16)
+    v = (x @ p["wv"]).reshape(2, 16, 4, 16)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / 4.0
+    mask = jnp.tril(jnp.ones((16, 16), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v).reshape(2, 16, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o @ p["wo"]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 32), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)
+    r = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(r, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([i], jnp.int32), 1e4)
+        kj = apply_rope(k, jnp.array([j], jnp.int32), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_ssm_chunked_matches_naive():
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    key = jax.random.PRNGKey(0)
+    Bb, S, nh, hd, ds = 2, 64, 2, 32, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bb, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, nh)))
+    A_log = jax.random.normal(ks[2], (nh,)) * 0.5
+    B = jax.random.normal(ks[3], (Bb, S, ds))
+    C = jax.random.normal(ks[4], (Bb, S, ds))
+    D = jnp.ones((nh,))
+    y1, h1 = ssm_mod.ssd_chunk_scan(x, dt, A_log, B, C, D)
+    y0, h0 = ssd_scan_ref(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), atol=2e-3, rtol=1e-3)
+
+
+def test_rwkv_chunked_matches_naive():
+    from repro.kernels.wkv_scan.ref import wkv_scan_ref
+    key = jax.random.PRNGKey(0)
+    B, S, nh, hd = 2, 64, 2, 32
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, nh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, nh, hd), jnp.float32)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, nh, hd)) - 1.0)
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.3
+    s0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    y1, s1 = rwkv_mod.wkv_chunk_scan(r, k, v, logw, u.reshape(nh, hd), s0)
+    y0, s0_ = wkv_scan_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0_), atol=2e-3, rtol=1e-3)
+
+
+def test_sliding_window_restricts_attention():
+    cfg = get_smoke("llama3-8b").replace(dtype="float32", decode_window=8)
+    key = jax.random.PRNGKey(0)
+    p = tf.init_params(cfg, key)
+    toks = jax.random.randint(key, (1, 32), 0, cfg.vocab)
+    # windowed forward differs from full attention forward
+    full_cfg = get_smoke("llama3-8b").replace(dtype="float32")
+    lw, _ = tf.forward(p, cfg, toks, mode="train")
+    lf, _ = tf.forward(p, full_cfg, toks, mode="train")
+    assert float(jnp.max(jnp.abs(lw - lf))) > 1e-4
+    # but the first `window` positions are identical
+    np.testing.assert_allclose(np.asarray(lw[:, :8]), np.asarray(lf[:, :8]),
+                               atol=1e-5)
