@@ -80,6 +80,47 @@ def bench_table4_cost():
         f"ratio={rounds/max(fedpae,1):.2f}")
 
 
+def bench_selection_throughput():
+    """Serial per-client loop vs ONE vmapped NSGA-II run over all clients
+    (the batched-engine tentpole). Same per-client PRNG streams, so both
+    paths produce identical chromosomes — only wall-time differs."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import row, timed
+    from repro.core.nsga2 import NSGAConfig, client_keys
+    from repro.core.selection import select_ensemble, select_ensembles
+
+    M, V, C = 16, 128, 8
+    cfg = NSGAConfig(pop_size=32, generations=10, k=4, seed=0)
+    rng = np.random.default_rng(0)
+    for n_clients in (8, 16, 32):
+        probs = jnp.asarray(rng.dirichlet(np.ones(C), size=(n_clients, M, V))
+                            .astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, C, (n_clients, V)))
+        keys = client_keys(cfg.seed, np.arange(n_clients))
+
+        def serial():
+            outs = [select_ensemble(probs[c], labels[c], cfg, key=keys[c])
+                    for c in range(n_clients)]
+            jax.block_until_ready(outs[-1]["chromosome"])
+            return outs
+
+        def batched():
+            out = select_ensembles(probs, labels, cfg, keys=keys)
+            jax.block_until_ready(out["chromosome"])
+            return out
+
+        outs, dt_serial = timed(serial, repeat=2)
+        out, dt_batched = timed(batched, repeat=2)
+        agree = all(np.array_equal(np.asarray(outs[c]["chromosome"]),
+                                   np.asarray(out["chromosome"][c]))
+                    for c in range(n_clients))
+        row(f"selection_vmapped_N{n_clients}", dt_batched * 1e6,
+            f"serial_us={dt_serial*1e6:.0f} "
+            f"speedup={dt_serial/max(dt_batched,1e-12):.2f}x "
+            f"chromosomes_match={agree}")
+
+
 def bench_nsga2_microbench():
     """NSGA-II generation throughput (the paper's P x G hot loop)."""
     import jax
@@ -162,17 +203,24 @@ def bench_roofline_summary():
             f"dominant={r['dominant']} useful={r['useful_ratio'] or 0:.2f}")
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
-    local_acc, res = bench_table1_accuracy()
-    bench_table2_negative_transfer(local_acc, res)
-    bench_table3_scalability()
+    if not smoke:
+        local_acc, res = bench_table1_accuracy()
+        bench_table2_negative_transfer(local_acc, res)
+        bench_table3_scalability()
     bench_table4_cost()
+    bench_selection_throughput()
     bench_nsga2_microbench()
     bench_ensemble_fitness_kernel()
     bench_partition_fig4()
-    bench_roofline_summary()
+    if not smoke:
+        bench_roofline_summary()
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: skip the model-training tables")
+    main(ap.parse_args().smoke)

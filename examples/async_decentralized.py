@@ -1,18 +1,21 @@
 """Asynchronous decentralized FedPAE: heterogeneous client speeds, gossip
 latency, ensemble re-selection on model arrival (virtual clock).
 
+This drives the UNIFIED engine (core/engine.py): every `recv` event
+incrementally materializes the receiving client's prediction store, and
+every debounced `select` tick re-runs REAL batched NSGA-II selection for
+all ready clients in one vmapped call — producing per-client validation
+accuracy over virtual time, not just bench-size traces.
+
     PYTHONPATH=src python examples/async_decentralized.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core.fedpae import FedPAEConfig, train_all_clients, build_benches
+from repro.core.fedpae import FedPAEConfig, run_fedpae_async, train_all_clients
 from repro.core.nsga2 import NSGAConfig
-from repro.core.selection import select_ensemble
 from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
 from repro.fl.client import ClientData
-from repro.fl.scheduler import AsyncConfig, simulate_async
-from repro.fl.topology import make_topology
+from repro.fl.scheduler import AsyncConfig
 
 
 def main():
@@ -29,38 +32,24 @@ def main():
                        nsga=NSGAConfig(pop_size=32, generations=15, k=3),
                        max_epochs=8, patience=3, width=12)
     models, ccfg = train_all_clients(datasets, cfg, 8)
-    benches = build_benches(datasets, models, ccfg, cfg)
-    # precompute every model's predictions on every client's val set
-    val_preds = [b.val_predictions(d.x_va) for b, d in zip(benches, datasets)]
-
-    def on_select(c, bench_ids, t):
-        """Re-run NSGA-II on the models that have ARRIVED so far."""
-        ids = [i for i in bench_ids]
-        sub = np.array([benches[c].entries.index(e) for e in benches[c].entries
-                        if (e.owner, e.family) in
-                        [(o, families[m]) for (o, m) in ids]])
-        if len(sub) < cfg.ensemble_k:
-            return None
-        probs = val_preds[c][sub]
-        pad = (-probs.shape[1]) % 128
-        pv = np.pad(probs, ((0, 0), (0, pad), (0, 0)))
-        yv = np.pad(datasets[c].y_va, (0, pad), constant_values=-1)
-        sel = select_ensemble(jnp.asarray(pv), jnp.asarray(yv), cfg.nsga)
-        return float(sel["val_accuracy"])
 
     acfg = AsyncConfig(n_clients=n_clients, models_per_client=len(families),
                        speed_lognorm_sigma=0.8, seed=0)
-    nb = make_topology("full", n_clients)
-    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.3 * m,
-                           on_select=on_select)
+    res = run_fedpae_async(datasets, 8, cfg, acfg=acfg,
+                           models=models, ccfg=ccfg,
+                           train_cost=lambda c, m: 1.0 + 0.3 * m)
 
     print("virtual-time ensemble quality per client (t, val_acc):")
     for c in range(n_clients):
-        series = " -> ".join(f"({t:.2f}, {a:.3f})" for t, a in trace.selections[c])
+        series = " -> ".join(f"({t:.2f}, {a:.3f})"
+                             for t, a in res.trace.selections[c])
         print(f"  client {c}: {series}")
+    print(f"\nfinal test accuracy per client: "
+          f"{np.round(res.test_acc, 3).tolist()} "
+          f"(mean {res.test_acc.mean():.3f})")
     # asynchrony: quality is non-decreasing as more peers arrive
     for c in range(n_clients):
-        accs = [a for _, a in trace.selections[c]]
+        accs = [a for _, a in res.trace.selections[c]]
         if len(accs) >= 2:
             assert accs[-1] >= accs[0] - 0.05, "quality degraded over time"
     print("\nOK: ensemble quality improves (or holds) as peer models arrive, "

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dynamic import des_accuracy
-from repro.core.fedpae import FedPAEConfig, build_benches, run_fedpae, train_all_clients
+from repro.core.fedpae import FedPAEConfig, run_fedpae, train_all_clients
 from repro.core.nsga2 import NSGAConfig
 from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
 from repro.fl.client import ClientData, accuracy

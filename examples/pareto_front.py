@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from repro.core.nsga2 import NSGAConfig
 from repro.core.selection import select_ensemble
 from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
-from repro.core.fedpae import FedPAEConfig, train_all_clients, build_benches
+from repro.core.fedpae import FedPAEConfig, train_all_clients, build_stores
 from repro.fl.client import ClientData
 
 
@@ -39,13 +39,12 @@ def main():
                        nsga=NSGAConfig(pop_size=64, generations=40, k=3),
                        max_epochs=8, patience=3, width=12)
     models, ccfg = train_all_clients(datasets, cfg, 8)
-    benches = build_benches(datasets, models, ccfg, cfg)
+    stores = build_stores(datasets, models, ccfg, cfg)
     c = 0
-    probs = benches[c].val_predictions(datasets[c].x_va)
-    pad = (-probs.shape[1]) % 128
-    pv = np.pad(probs, ((0, 0), (0, pad), (0, 0)))
-    yv = np.pad(datasets[c].y_va, (0, pad), constant_values=-1)
-    sel = select_ensemble(jnp.asarray(pv), jnp.asarray(yv), cfg.nsga)
+    # the store already holds the padded (M, V_pad, C) device-ready tensor
+    pv, yv, mask = stores[c].padded()
+    sel = select_ensemble(jnp.asarray(pv), jnp.asarray(yv), cfg.nsga,
+                          model_mask=jnp.asarray(mask, jnp.float32))
     objs = np.asarray(sel["objs"])
     pareto = np.asarray(sel["pareto_mask"])
     pop = np.asarray(sel["pop"])

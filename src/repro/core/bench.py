@@ -1,63 +1,136 @@
-"""The model bench: every client's view of the network's models.
+"""The prediction store: every client's view of the network's models.
 
 Default exchange unit is the PREDICTION MATRIX on the receiving client's
 validation set (the paper's low-storage variant — §III-A), with lazy
 checkpoint fetch for selected members only. At LLM scale this is what
 moves over pod-to-pod DCN instead of multi-GB checkpoints (DESIGN.md §5).
+
+`PredictionStore` materializes one client's bench as a single padded
+tensor `preds[(capacity, V_pad, C)]` plus a slot-validity mask: slot i is
+reserved for global model id i, so stores of different clients (and of
+the same client at different points of an asynchronous run) stay
+slot-aligned and can be stacked into the `(N, M, V, C)` batch that the
+vmapped selection engine consumes (`stack_stores`). Validation rows past
+the client's own V are label-padded with -1 and zero predictions, which
+the objectives treat as no-ops (objectives.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
+
+V_ALIGN = 128  # validation-axis padding multiple (one jit/kernel shape)
 
 
 @dataclasses.dataclass
 class BenchEntry:
-    model_id: int
+    model_id: int          # GLOBAL model id == store slot index
     owner: int
     family: str
-    predict: Callable  # x -> (N, C) probabilities
+    predict: Callable      # x -> (N, C) probabilities
     n_params: int = 0
 
 
-@dataclasses.dataclass
-class ModelBench:
-    """Per-client repository of models (or their prediction matrices)."""
-    client: int
-    entries: list = dataclasses.field(default_factory=list)
-    _val_preds: dict = dataclasses.field(default_factory=dict)
+class PredictionStore:
+    """Per-client repository of bench prediction tensors.
 
-    def add(self, entry: BenchEntry):
-        self.entries.append(entry)
+    Slots are keyed by global model id; `add` materializes the entry's
+    predictions on the client's validation set into the padded device
+    tensor (the stored 'compact representation'); `predictions` is the
+    masked LAZY fetch for test-set serving — only selected members are
+    evaluated, everything else stays zero.
+    """
+
+    def __init__(self, client: int, capacity: int, x_val: np.ndarray,
+                 y_val: np.ndarray, n_classes: int, v_pad: Optional[int] = None):
+        self.client = client
+        self.capacity = capacity
+        self.x_val = x_val
+        self.n_val = len(y_val)
+        v = self.n_val if v_pad is None else v_pad
+        self.v_pad = v + ((-v) % V_ALIGN)
+        self.n_classes = n_classes
+        self.preds = np.zeros((capacity, self.v_pad, n_classes), np.float32)
+        self.labels = np.full((self.v_pad,), -1, np.int32)
+        self.labels[:self.n_val] = y_val
+        self.mask = np.zeros((capacity,), bool)
+        self.entries: List[Optional[BenchEntry]] = [None] * capacity
+
+    def add(self, entry: BenchEntry, preds: Optional[np.ndarray] = None):
+        """Materialize `entry` into its slot. `preds` short-circuits the
+        forward pass when the (V, C) matrix is already known (batched
+        multi-model predict in the driver, or a peer shipped the matrix)."""
+        slot = entry.model_id
+        if preds is None:
+            preds = entry.predict(self.x_val)
+        self.preds[slot, :self.n_val] = np.asarray(preds, np.float32)[:self.n_val]
+        self.mask[slot] = True
+        self.entries[slot] = entry
+
+    @property
+    def n_present(self) -> int:
+        return int(self.mask.sum())
 
     @property
     def owners(self) -> np.ndarray:
-        return np.array([e.owner for e in self.entries])
+        """(capacity,) owner per slot, -1 where nothing has arrived."""
+        return np.array([-1 if e is None else e.owner for e in self.entries])
 
     def is_local(self) -> np.ndarray:
         return self.owners == self.client
 
-    def val_predictions(self, x_val: np.ndarray) -> np.ndarray:
-        """(M, V, C) — cached per model (the stored 'compact representation')."""
-        mats = []
-        for e in self.entries:
-            if e.model_id not in self._val_preds:
-                self._val_preds[e.model_id] = e.predict(x_val)
-            mats.append(self._val_preds[e.model_id])
-        return np.stack(mats)
+    def val_predictions(self, x_val: Optional[np.ndarray] = None) -> np.ndarray:
+        """(capacity, V, C) — the stored validation-set matrices (empty
+        slots are zero). `x_val` is accepted for API compatibility but
+        must BE the validation set; use `predictions` for other data."""
+        assert x_val is None or len(x_val) == self.n_val, \
+            "val_predictions serves the stored validation set; " \
+            "use predictions(x) for other data"
+        return self.preds[:, :self.n_val]
+
+    def padded(self):
+        """(preds (capacity, V_pad, C), labels (V_pad,), mask (capacity,))
+        — the device-ready view the selection engine stacks."""
+        return self.preds, self.labels, self.mask
 
     def predictions(self, x: np.ndarray, mask: Optional[np.ndarray] = None) -> np.ndarray:
-        """(M, N, C) on arbitrary data; with `mask`, only selected members
-        are evaluated (the 'download only what you need' path) and other
-        rows are zero."""
-        out = None
+        """(capacity, N, C) on arbitrary data; with `mask`, only selected
+        PRESENT members are evaluated (the 'download only what you need'
+        path) and other rows are zero. Always returns an array — an
+        all-False mask yields zeros, never None."""
+        out = np.zeros((self.capacity, len(x), self.n_classes), np.float32)
         for i, e in enumerate(self.entries):
-            if mask is not None and not mask[i]:
+            if e is None or (mask is not None and not mask[i]):
                 continue
-            p = e.predict(x)
-            if out is None:
-                out = np.zeros((len(self.entries),) + p.shape, np.float32)
-            out[i] = p
+            out[i] = e.predict(x)
         return out
+
+
+def stack_stores(stores, clients=None, v_to: Optional[int] = None):
+    """Stack per-client stores into the engine's batch:
+    (preds (N, cap, V_max, C), labels (N, V_max), masks (N, cap)).
+    All stores must share `capacity` and `n_classes`; shorter validation
+    sets are -1/zero padded up to the widest store (or `v_to`, which the
+    engine pins globally so every batch compiles to one shape)."""
+    if clients is None:
+        clients = range(len(stores))
+    sel = [stores[c] for c in clients]
+    cap = sel[0].capacity
+    v_max = v_to if v_to is not None else max(s.v_pad for s in sel)
+    C = sel[0].n_classes
+    preds = np.zeros((len(sel), cap, v_max, C), np.float32)
+    labels = np.full((len(sel), v_max), -1, np.int32)
+    masks = np.zeros((len(sel), cap), np.float32)
+    for i, s in enumerate(sel):
+        assert s.capacity == cap and s.n_classes == C
+        preds[i, :, :s.v_pad] = s.preds
+        labels[i, :s.v_pad] = s.labels
+        masks[i] = s.mask.astype(np.float32)
+    return preds, labels, masks
+
+
+# Backwards-compatible name: the callable-based ModelBench was replaced by
+# the tensor-resident PredictionStore in the batched-engine refactor.
+ModelBench = PredictionStore

@@ -1,0 +1,102 @@
+"""The unified selection engine: ONE batched selection path shared by the
+synchronous driver (`run_fedpae`) and the discrete-event asynchronous
+simulator (`run_fedpae_async`).
+
+The engine owns every client's `PredictionStore`, stacks the requested
+clients into an `(N, M, V, C)` batch, and answers with a single
+vmap-compiled NSGA-II run (`selection.select_ensembles`): per-client PRNG
+streams, per-client model-slot masks (models that have not arrived yet
+simply stay masked off), and — with use_kernel=True — one batched Pallas
+`ensemble_fitness` launch per objective evaluation.
+
+Client batches are padded to the next power of two (by repeating the
+first client) so the jitted program is compiled for O(log N) distinct
+batch sizes no matter how the async event stream groups re-selections
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bench import stack_stores
+from repro.core.nsga2 import NSGAConfig, client_keys
+from repro.core.selection import local_only_chromosome, select_ensembles
+
+
+def _pow2_pad(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class SelectionEngine:
+    """Batched, incremental ensemble selection over a fleet of stores."""
+
+    def __init__(self, stores, nsga: NSGAConfig, use_kernel: bool = False,
+                 seed: int = 0, ensemble_k: Optional[int] = None):
+        self.stores = list(stores)
+        self.nsga = nsga
+        self.use_kernel = use_kernel
+        self.seed = seed
+        self.ensemble_k = ensemble_k if ensemble_k is not None else max(nsga.k, 1)
+        # pin the validation pad width globally: every batch, whatever its
+        # membership, lowers to the same (B, M, V, C) jit signature family
+        self._v_max = max(s.v_pad for s in self.stores)
+        self.results: Dict[int, dict] = {}   # client -> last selection dict
+
+    # ---- selection ----------------------------------------------------
+    def min_models(self) -> int:
+        """A client is selectable once it can fill an ensemble."""
+        return max(1, self.nsga.k)
+
+    def select(self, clients: Optional[Iterable[int]] = None) -> Dict[int, dict]:
+        """Run ONE vmapped NSGA-II over `clients` (default: all) and cache
+        per-client results. Clients whose stores cannot fill an ensemble
+        yet are skipped. Returns {client: selection dict}."""
+        if clients is None:
+            clients = range(len(self.stores))
+        ready = [c for c in clients if self.stores[c].n_present >= self.min_models()]
+        if not ready:
+            return {}
+        B = _pow2_pad(len(ready))
+        batch = ready + [ready[0]] * (B - len(ready))
+        preds, labels, masks = stack_stores(self.stores, batch, v_to=self._v_max)
+        keys = client_keys(self.seed, np.asarray(batch, np.uint32))
+        out = select_ensembles(jnp.asarray(preds), jnp.asarray(labels),
+                               self.nsga, use_kernel=self.use_kernel,
+                               keys=keys, model_mask=jnp.asarray(masks))
+        fresh = {}
+        for i, c in enumerate(ready):
+            res = {k: np.asarray(v[i]) for k, v in out.items()}
+            self.results[c] = res
+            fresh[c] = res
+        return fresh
+
+    # ---- serving ------------------------------------------------------
+    def chromosome(self, c: int) -> np.ndarray:
+        """The client's current ensemble, falling back to the local-only
+        chromosome (negative-transfer safety valve) when no selection has
+        run yet or the selected mask is empty."""
+        store = self.stores[c]
+        res = self.results.get(c)
+        chrom = None if res is None else np.asarray(res["chromosome"])
+        if chrom is None or (chrom > 0.5).sum() == 0:
+            present = store.mask.astype(np.float32)
+            chrom = np.asarray(local_only_chromosome(
+                jnp.asarray(store.is_local() & store.mask), self.ensemble_k))
+            chrom = chrom * present
+        return chrom
+
+    def serve(self, c: int, x: np.ndarray):
+        """Masked lazy test-set serving: fetch only the selected members'
+        predictions, mean-prob vote. Returns (vote (N, C), chromosome)."""
+        store = self.stores[c]
+        chrom = self.chromosome(c)
+        mask = chrom > 0.5
+        probs = store.predictions(x, mask=mask)  # zeros where masked off
+        vote = (chrom[:, None, None] * probs).sum(0) / max(1, int(mask.sum()))
+        return vote, chrom

@@ -1,25 +1,38 @@
-"""FedPAE end-to-end driver (paper Algorithm, §III).
+"""FedPAE end-to-end drivers (paper Algorithm, §III).
 
 1. every client trains its local models (heterogeneous families),
-2. peer-to-peer exchange builds each client's model bench,
-3. each client runs NSGA-II ensemble selection on ITS validation set,
-4. the selected ensemble serves the client's test data.
+2. peer-to-peer exchange builds each client's prediction store,
+3. ensemble selection — ONE vmap-compiled NSGA-II run covering every
+   client at once (core/engine.py), per-client PRNG streams,
+4. the selected ensemble serves the client's test data via masked lazy
+   prediction fetch.
 
-Returns per-client accuracies + the diagnostics the paper reports
-(fraction of locally-trained models selected, negative-transfer ranges).
+Two drivers share the same `SelectionEngine`:
+
+  run_fedpae        — synchronous: all stores complete, one batched
+                      selection, then serve (returns the diagnostics the
+                      paper reports: local-selection fraction,
+                      negative-transfer ranges).
+  run_fedpae_async  — the paper's asynchronous claim made real: the
+                      discrete-event simulator (fl/scheduler.py) feeds
+                      `trained`/`recv` arrivals into the stores
+                      incrementally and answers debounced select events
+                      with batched re-selection, producing per-client
+                      validation-accuracy-over-virtual-time curves.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bench import BenchEntry, ModelBench
+from repro.core.bench import BenchEntry, PredictionStore
+from repro.core.engine import SelectionEngine
 from repro.core.nsga2 import NSGAConfig
-from repro.core.selection import select_ensemble
-from repro.fl.client import ClientData, accuracy, predict_probs, train_local_model
+from repro.fl.client import (ClientData, accuracy, predict_probs,
+                             predict_probs_batched, train_local_model)
+from repro.fl.scheduler import AsyncConfig, AsyncTrace, simulate_async
 from repro.fl.topology import make_topology
 from repro.models.cnn import CNNConfig, n_params
 
@@ -47,8 +60,16 @@ class FedPAEResult:
     local_frac: np.ndarray         # fraction of selected members that are local
     chromosomes: list
     member_val_acc: list
-    benches: list
+    benches: list                  # per-client PredictionStore
     models: dict
+
+
+@dataclasses.dataclass
+class AsyncFedPAEResult:
+    trace: AsyncTrace              # selections[c] = [(t, val_acc)] curves
+    test_acc: np.ndarray           # (N_clients,) final-ensemble test accuracy
+    stores: list
+    engine: SelectionEngine
 
 
 def train_all_clients(datasets, cfg: FedPAEConfig, n_classes: int):
@@ -66,58 +87,112 @@ def train_all_clients(datasets, cfg: FedPAEConfig, n_classes: int):
     return models, ccfg
 
 
-def build_benches(datasets, models, ccfg, cfg: FedPAEConfig):
-    """Step 2: p2p exchange over the topology (full graph = paper setup)."""
+def _make_entry(owner: int, fam: str, fam_idx: int, models, ccfg,
+                n_families: int) -> BenchEntry:
+    params, _ = models[(owner, fam)]
+    return BenchEntry(
+        model_id=owner * n_families + fam_idx, owner=owner, family=fam,
+        predict=(lambda x, f=fam, p=params: predict_probs(f, ccfg, p, x)),
+        n_params=n_params(params))
+
+
+def _empty_stores(datasets, cfg: FedPAEConfig, n_classes: int):
+    """Slot-aligned stores: slot owner*F+fam_idx on every client, padded
+    to one common validation width so all stacks share a jit signature."""
+    F = len(cfg.families)
+    capacity = len(datasets) * F
+    v_max = max(len(d.y_va) for d in datasets)
+    return [PredictionStore(c, capacity, d.x_va, d.y_va, n_classes,
+                            v_pad=v_max)
+            for c, d in enumerate(datasets)]
+
+
+def build_stores(datasets, models, ccfg, cfg: FedPAEConfig):
+    """Step 2: p2p exchange over the topology (full graph = paper setup).
+    Each reachable family is materialized with ONE batched multi-model
+    forward per (family, client) — the exchange-layer hot path."""
     n = len(datasets)
     neighbors = make_topology(cfg.topology, n, seed=cfg.seed)
-    benches = []
-    mid = {}
+    F = len(cfg.families)
+    stores = _empty_stores(datasets, cfg, ccfg.n_classes)
     for c in range(n):
-        reachable = [c] + list(neighbors[c]) if cfg.topology != "full" else list(range(n))
-        bench = ModelBench(client=c)
-        for owner in sorted(set(reachable)):
-            for fam in cfg.families:
-                params, _ = models[(owner, fam)]
-                key = (owner, fam)
-                if key not in mid:
-                    mid[key] = len(mid)
-                bench.add(BenchEntry(
-                    model_id=mid[key], owner=owner, family=fam,
-                    predict=(lambda x, f=fam, p=params: predict_probs(f, ccfg, p, x)),
-                    n_params=n_params(params)))
-        benches.append(bench)
-    return benches
+        reachable = sorted(set([c] + list(neighbors[c]))) \
+            if cfg.topology != "full" else list(range(n))
+        for fi, fam in enumerate(cfg.families):
+            params_seq = [models[(o, fam)][0] for o in reachable]
+            fam_preds = predict_probs_batched(fam, ccfg, params_seq,
+                                              datasets[c].x_va)
+            for o, pv in zip(reachable, fam_preds):
+                stores[c].add(_make_entry(o, fam, fi, models, ccfg, F),
+                              preds=pv)
+    return stores
+
+
+# Backwards-compatible name for the pre-store API.
+build_benches = build_stores
 
 
 def run_fedpae(datasets, n_classes: int, cfg: FedPAEConfig,
                models=None, ccfg=None) -> FedPAEResult:
     if models is None:
         models, ccfg = train_all_clients(datasets, cfg, n_classes)
-    benches = build_benches(datasets, models, ccfg, cfg)
+    stores = build_stores(datasets, models, ccfg, cfg)
+    engine = SelectionEngine(stores, cfg.nsga, use_kernel=cfg.use_kernel,
+                             seed=cfg.seed, ensemble_k=cfg.ensemble_k)
+    engine.select()  # one vmapped NSGA-II run for ALL clients
 
     accs, local_fracs, chroms, member_accs = [], [], [], []
     for c, data in enumerate(datasets):
-        bench = benches[c]
-        probs_val = bench.val_predictions(data.x_va)  # (M, V, C)
-        # pad V to a multiple of 128 so the jitted NSGA-II is compiled once
-        pad = (-probs_val.shape[1]) % 128
-        pv = np.pad(probs_val, ((0, 0), (0, pad), (0, 0)))
-        yv = np.pad(data.y_va, (0, pad), constant_values=-1)
-        sel = select_ensemble(jnp.asarray(pv), jnp.asarray(yv),
-                              cfg.nsga, use_kernel=cfg.use_kernel)
-        chrom = np.asarray(sel["chromosome"])
+        vote, chrom = engine.serve(c, data.x_te)
         mask = chrom > 0.5
-        # serve: fetch only selected members' predictions on the test set
-        probs_te = bench.predictions(data.x_te, mask=mask)
-        vote = (chrom[:, None, None] * probs_te).sum(0) / max(1, mask.sum())
         accs.append(accuracy(vote, data.y_te))
-        local_fracs.append(float((mask & bench.is_local()).sum() / max(1, mask.sum())))
+        local_fracs.append(float((mask & stores[c].is_local()).sum()
+                                 / max(1, mask.sum())))
         chroms.append(chrom)
-        member_accs.append(np.asarray(sel["member_acc"]))
+        member_accs.append(np.asarray(engine.results[c]["member_acc"]))
     return FedPAEResult(
         test_acc=np.array(accs), local_frac=np.array(local_fracs),
         chromosomes=chroms, member_val_acc=member_accs,
-        benches=benches, models=models)
+        benches=stores, models=models)
+
+
+def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
+                     acfg: Optional[AsyncConfig] = None,
+                     models=None, ccfg=None,
+                     train_cost: Optional[Callable] = None) -> AsyncFedPAEResult:
+    """The unified async driver: virtual-clock simulation where arrivals
+    incrementally materialize the stores and debounced select events run
+    REAL batched re-selection through the shared engine."""
+    n = len(datasets)
+    if models is None:
+        models, ccfg = train_all_clients(datasets, cfg, n_classes)
+    F = len(cfg.families)
+    if acfg is None:
+        acfg = AsyncConfig(n_clients=n, models_per_client=F, seed=cfg.seed)
+    assert acfg.n_clients == n and acfg.models_per_client == F, \
+        "async config must match the client/model grid"
+    neighbors = make_topology(cfg.topology, n, seed=cfg.seed)
+    stores = _empty_stores(datasets, cfg, n_classes)
+    engine = SelectionEngine(stores, cfg.nsga, use_kernel=cfg.use_kernel,
+                             seed=cfg.seed, ensemble_k=cfg.ensemble_k)
+
+    def on_add(c, model_key, t):
+        owner, m = model_key
+        stores[c].add(_make_entry(owner, cfg.families[m], m, models, ccfg, F))
+
+    def on_select_batch(clients, bench_ids, t):
+        fresh = engine.select(clients)
+        return {c: float(r["val_accuracy"]) for c, r in fresh.items()}
+
+    trace = simulate_async(
+        acfg, neighbors,
+        train_cost=train_cost or (lambda c, m: 1.0 + 0.3 * m),
+        on_add=on_add, on_select_batch=on_select_batch)
+
+    accs = [accuracy(engine.serve(c, d.x_te)[0], d.y_te)
+            for c, d in enumerate(datasets)]
+    return AsyncFedPAEResult(trace=trace, test_acc=np.array(accs),
+                             stores=stores, engine=engine)
 
 
 def run_local_ensemble(datasets, n_classes: int, cfg: FedPAEConfig,

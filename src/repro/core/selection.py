@@ -1,6 +1,14 @@
 """Peer-adaptive ensemble selection (FedPAE §III-A):
 NSGA-II over (strength, diversity), then pick the Pareto-front member with
-the best OVERALL validation accuracy (mean-prob vote)."""
+the best OVERALL validation accuracy (mean-prob vote).
+
+`select_ensemble` scores ONE client; `select_ensembles` scores a whole
+client batch in one compiled program: per-client acc/S statistics are
+vmapped, the genetic loop runs in lockstep via `run_nsga2_batched` with a
+distinct PRNG stream per client, and with use_kernel=True the population
+of EVERY client is scored by a single batched Pallas launch per
+evaluation (DESIGN.md §3).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,14 +16,35 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .nsga2 import NSGAConfig, run_nsga2
+from .nsga2 import NSGAConfig, client_keys, run_nsga2, run_nsga2_batched
 from .objectives import (ensemble_accuracy, member_accuracy,
                          population_objectives, similarity_matrix)
 
 
+def _pick_winner(pop, objs, ranks, probs_val, labels_val, acc):
+    """Shared post-GA step: best overall-accuracy member of the front."""
+    pareto = ranks == 0
+    overall = ensemble_accuracy(pop, probs_val, labels_val)
+    score = jnp.where(pareto, overall, -1.0)
+    best = jnp.argmax(score)
+    return {
+        "chromosome": pop[best],
+        "val_accuracy": overall[best],
+        "member_acc": acc,
+        "pareto_mask": pareto,
+        "pop": pop,
+        "objs": objs,
+    }
+
+
 @partial(jax.jit, static_argnames=("nsga", "use_kernel"))
-def select_ensemble(probs_val, labels_val, nsga: NSGAConfig, use_kernel: bool = False):
+def select_ensemble(probs_val, labels_val, nsga: NSGAConfig,
+                    use_kernel: bool = False, key=None, model_mask=None):
     """probs_val: (M, V, C) bench predictions on the local validation set.
+
+    `key` — this client's PRNG stream (defaults to PRNGKey(nsga.seed));
+    `model_mask` — optional (M,) 0/1 valid-slot mask (padding slots whose
+    predictions have not arrived are never selected).
 
     Returns dict with:
       chromosome (M,) 0/1 — the selected ensemble,
@@ -37,20 +66,44 @@ def select_ensemble(probs_val, labels_val, nsga: NSGAConfig, use_kernel: bool = 
             st, dv = population_objectives(pop, acc, S)
             return jnp.stack([st, dv], axis=1)
 
-    out = run_nsga2(eval_fn, M, nsga)
-    pop, objs, ranks = out["pop"], out["objs"], out["ranks"]
-    pareto = ranks == 0
-    overall = ensemble_accuracy(pop, probs_val, labels_val)
-    score = jnp.where(pareto, overall, -1.0)
-    best = jnp.argmax(score)
-    return {
-        "chromosome": pop[best],
-        "val_accuracy": overall[best],
-        "member_acc": acc,
-        "pareto_mask": pareto,
-        "pop": pop,
-        "objs": objs,
-    }
+    out = run_nsga2(eval_fn, M, nsga, key=key, valid_mask=model_mask)
+    return _pick_winner(out["pop"], out["objs"], out["ranks"],
+                        probs_val, labels_val, acc)
+
+
+@partial(jax.jit, static_argnames=("nsga", "use_kernel"))
+def select_ensembles(probs_val, labels_val, nsga: NSGAConfig,
+                     use_kernel: bool = False, keys=None, model_mask=None):
+    """Batched multi-client selection — the vmapped engine.
+
+    probs_val: (N, M, V, C) stacked store tensors (one row per client);
+    labels_val: (N, V) with -1 padding; keys: (N, 2) per-client PRNG
+    streams (defaults to fold_in(nsga.seed, client_index));
+    model_mask: (N, M) 0/1 — which store slots hold arrived predictions.
+
+    Returns the same dict as `select_ensemble` with a leading client axis
+    on every value.
+    """
+    N, M = probs_val.shape[0], probs_val.shape[1]
+    if keys is None:
+        keys = client_keys(nsga.seed, jnp.arange(N))
+    acc = jax.vmap(member_accuracy)(probs_val, labels_val)          # (N, M)
+    S = jax.vmap(similarity_matrix)(probs_val, labels_val)          # (N, M, M)
+
+    if use_kernel:
+        from repro.kernels.ensemble_fitness import ops as ef_ops
+
+        def eval_fn(pop):  # (N, P, M) -> (N, P, 2): ONE launch, all clients
+            st, dv = ef_ops.ensemble_fitness_batched(pop, acc, S)
+            return jnp.stack([st, dv], axis=2)
+    else:
+        def eval_fn(pop):
+            st, dv = jax.vmap(population_objectives)(pop, acc, S)
+            return jnp.stack([st, dv], axis=2)
+
+    out = run_nsga2_batched(eval_fn, M, nsga, keys, valid_mask=model_mask)
+    return jax.vmap(_pick_winner)(out["pop"], out["objs"], out["ranks"],
+                                  probs_val, labels_val, acc)
 
 
 def local_only_chromosome(is_local, k: int):

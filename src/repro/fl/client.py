@@ -65,6 +65,39 @@ def predict_probs(family: str, cfg: CNNConfig, params, x: np.ndarray,
     return np.concatenate(outs)[:n]
 
 
+@lru_cache(maxsize=64)
+def _multi_predict_fn(family: str, cfg: CNNConfig):
+    @jax.jit
+    def predict_chunk_multi(stacked_params, xb):
+        # stacked_params: every leaf gains a leading model axis
+        return jax.vmap(
+            lambda p: jax.nn.softmax(apply_model(family, p, xb), axis=-1)
+        )(stacked_params)
+    return predict_chunk_multi
+
+
+def predict_probs_batched(family: str, cfg: CNNConfig, params_seq,
+                          x: np.ndarray) -> np.ndarray:
+    """Batched multi-model inference: evaluate ALL of one family's models
+    on `x` in one vmapped jitted call per chunk -> (n_models, N, C).
+
+    This is the exchange-layer hot path: building a client's prediction
+    store evaluates n_owners models per family, and stacking their
+    parameter trees turns that into a single (n_models, batch) forward
+    instead of n_owners separate dispatches.
+    """
+    params_seq = list(params_seq)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params_seq)
+    fn = _multi_predict_fn(family, cfg)
+    n = len(x)
+    pad = (-n) % EVAL_CHUNK
+    xp = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)]) if pad else x
+    outs = []
+    for i in range(0, len(xp), EVAL_CHUNK):
+        outs.append(np.asarray(fn(stacked, jnp.asarray(xp[i:i + EVAL_CHUNK]))))
+    return np.concatenate(outs, axis=1)[:, :n]
+
+
 def accuracy(probs: np.ndarray, y: np.ndarray) -> float:
     return float((probs.argmax(-1) == y).mean())
 

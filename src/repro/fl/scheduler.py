@@ -9,11 +9,19 @@ Events:
   ("trained", c, model_id)  — client c finished local training of a model
   ("recv",    c, model_id)  — a peer's model arrived at client c
   ("select",  c)            — client c re-runs ensemble selection
+
+Selection is DEBOUNCED and BATCHED: arrivals schedule the client's select
+on the next tick of a `select_debounce`-spaced grid, so clients whose
+arrivals land in the same window share one select timestamp, and the loop
+drains all same-time select events into a single `on_select_batch` call —
+which the unified engine (core/engine.py) answers with one vmapped
+NSGA-II run covering every ready client.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Callable, Optional
 
 import numpy as np
@@ -36,10 +44,25 @@ class AsyncTrace:
     selections: dict                   # client -> [(t, val_acc)]
 
 
+def _next_select_tick(t: float, debounce: float) -> float:
+    """Quantize to the debounce grid so concurrent arrivals coalesce."""
+    if debounce <= 0:
+        return t
+    return (math.floor(t / debounce) + 1) * debounce
+
+
 def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
-                   on_select: Optional[Callable] = None) -> AsyncTrace:
+                   on_select: Optional[Callable] = None,
+                   on_add: Optional[Callable] = None,
+                   on_select_batch: Optional[Callable] = None) -> AsyncTrace:
     """train_cost(client, local_idx) -> virtual duration of that training.
+    on_add(client, model_key, t) — a model (own or peer) entered the
+      client's bench; the engine uses this to incrementally materialize
+      the prediction store.
     on_select(client, bench_ids, t) -> val_acc (or None to skip recording).
+    on_select_batch(clients, {client: bench_ids}, t) -> {client: val_acc}
+      — preferred: all clients whose debounced select fires at time t are
+      handed over in ONE call for batched (vmapped) re-selection.
 
     Returns the full event trace — tests assert gossip convergence and
     monotone bench growth on it.
@@ -52,6 +75,20 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     pending_select = set()
     trace = AsyncTrace(events=[], bench_sizes={c: [] for c in range(cfg.n_clients)},
                        selections={c: [] for c in range(cfg.n_clients)})
+    want_select = on_select is not None or on_select_batch is not None
+
+    def schedule_select(c, t):
+        nonlocal seq
+        if c in pending_select:
+            return
+        pending_select.add(c)
+        heapq.heappush(q, (_next_select_tick(t, cfg.select_debounce),
+                           seq, "select", c, None))
+        seq += 1
+
+    def record_selection(c, t, acc):
+        if acc is not None:
+            trace.selections[c].append((t, float(acc)))
 
     for c in range(cfg.n_clients):
         t_done = 0.0
@@ -66,6 +103,10 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
         if kind == "trained":
             bench[c].add(payload)
             trace.bench_sizes[c].append((t, len(bench[c])))
+            if on_add is not None:
+                on_add(c, payload, t)
+            if want_select:  # own models also re-trigger selection
+                schedule_select(c, t)
             for nb in neighbors[c]:
                 lat = cfg.link_latency * (1 + rng.random())
                 heapq.heappush(q, (t + lat, seq, "recv", nb, payload))
@@ -74,14 +115,23 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             if payload not in bench[c]:
                 bench[c].add(payload)
                 trace.bench_sizes[c].append((t, len(bench[c])))
-                if c not in pending_select:
-                    pending_select.add(c)
-                    heapq.heappush(q, (t + cfg.select_debounce, seq, "select", c, None))
-                    seq += 1
+                if on_add is not None:
+                    on_add(c, payload, t)
+                schedule_select(c, t)
         elif kind == "select":
             pending_select.discard(c)
-            if on_select is not None:
-                acc = on_select(c, sorted(bench[c]), t)
-                if acc is not None:
-                    trace.selections[c].append((t, float(acc)))
+            ready = [c]
+            if on_select_batch is not None:
+                # drain every same-tick select into one batched call
+                while q and q[0][0] == t and q[0][2] == "select":
+                    t2, _, _, c2, _ = heapq.heappop(q)
+                    trace.events.append((t2, "select", c2, None))
+                    pending_select.discard(c2)
+                    ready.append(c2)
+                accs = on_select_batch(
+                    ready, {b: sorted(bench[b]) for b in ready}, t) or {}
+                for b in ready:
+                    record_selection(b, t, accs.get(b))
+            elif on_select is not None:
+                record_selection(c, t, on_select(c, sorted(bench[c]), t))
     return trace

@@ -8,6 +8,17 @@ VMEM (M <= ~1500 comfortably fits: M^2 fp32 @ M=1024 is 4 MB).
 
   strength  = (C @ acc) / k
   diversity = 1 - (rowsum((C @ S) * C) - C @ diag(S)) / (k (k-1))
+
+Two entry points:
+
+  ensemble_fitness          — one client: pop (P, M), acc (M,), S (M, M).
+  ensemble_fitness_batched  — N clients in ONE launch: the client axis is
+                              folded into the grid as a leading dimension
+                              (grid = (N, P // BLOCK_P)), so grid step
+                              (n, i) scores client n's i-th population
+                              tile against client n's own acc/S blocks.
+                              This is what `select_ensembles`'s vmapped
+                              NSGA-II calls with use_kernel=True.
 """
 from __future__ import annotations
 
@@ -20,10 +31,8 @@ from jax.experimental import pallas as pl
 BLOCK_P = 128
 
 
-def _kernel(pop_ref, acc_ref, S_ref, strength_ref, diversity_ref):
-    c = pop_ref[...]  # (BLOCK_P, M) f32 in VMEM
-    acc = acc_ref[...]  # (1, M)
-    S = S_ref[...]  # (M, M)
+def _fitness_math(c, acc, S):
+    """c: (BLOCK_P, M); acc: (1, M); S: (M, M) -> (strength, diversity)."""
     k = jnp.sum(c, axis=1)
     kc = jnp.maximum(k, 1.0)
     strength = (c @ acc[0][:, None])[:, 0] / kc  # MXU matvec
@@ -33,8 +42,20 @@ def _kernel(pop_ref, acc_ref, S_ref, strength_ref, diversity_ref):
         jax.lax.broadcasted_iota(jnp.int32, S.shape, 1)).astype(S.dtype)
     self_sim = (c @ jnp.sum(diag, axis=1)[:, None])[:, 0]
     pairs = jnp.maximum(k * (k - 1.0), 1.0)
+    return strength, 1.0 - (quad - self_sim) / pairs
+
+
+def _kernel(pop_ref, acc_ref, S_ref, strength_ref, diversity_ref):
+    strength, diversity = _fitness_math(pop_ref[...], acc_ref[...], S_ref[...])
     strength_ref[...] = strength
-    diversity_ref[...] = 1.0 - (quad - self_sim) / pairs
+    diversity_ref[...] = diversity
+
+
+def _kernel_batched(pop_ref, acc_ref, S_ref, strength_ref, diversity_ref):
+    # blocks carry a leading singleton client dim: (1, BLOCK_P, M) etc.
+    strength, diversity = _fitness_math(pop_ref[0], acc_ref[0], S_ref[0])
+    strength_ref[0] = strength
+    diversity_ref[0] = diversity
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -63,3 +84,32 @@ def ensemble_fitness(pop, acc, S, interpret: bool = True):
     )(pop.astype(jnp.float32), acc.astype(jnp.float32)[None, :],
       S.astype(jnp.float32))
     return strength[:P], diversity[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ensemble_fitness_batched(pop, acc, S, interpret: bool = True):
+    """pop: (N, P, M) f32; acc: (N, M); S: (N, M, M) ->
+    (strength (N, P), diversity (N, P)) — one launch for all N clients."""
+    N, P, M = pop.shape
+    pad = (-P) % BLOCK_P
+    if pad:
+        pop = jnp.pad(pop, ((0, 0), (0, pad), (0, 0)))
+    Pp = pop.shape[1]
+    grid = (N, Pp // BLOCK_P)
+    out_shape = (jax.ShapeDtypeStruct((N, Pp), jnp.float32),
+                 jax.ShapeDtypeStruct((N, Pp), jnp.float32))
+    strength, diversity = pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_P, M), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, 1, M), lambda n, i: (n, 0, 0)),
+            pl.BlockSpec((1, M, M), lambda n, i: (n, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, BLOCK_P), lambda n, i: (n, i)),
+                   pl.BlockSpec((1, BLOCK_P), lambda n, i: (n, i))),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pop.astype(jnp.float32), acc.astype(jnp.float32)[:, None, :],
+      S.astype(jnp.float32))
+    return strength[:, :P], diversity[:, :P]

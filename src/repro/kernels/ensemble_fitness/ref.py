@@ -2,6 +2,7 @@
 core/objectives.population_objectives)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -16,3 +17,9 @@ def ensemble_fitness_ref(pop, acc, S):
     pairs = jnp.maximum(k * (k - 1.0), 1.0)
     diversity = 1.0 - (quad - self_sim) / pairs
     return strength, diversity
+
+
+def ensemble_fitness_batched_ref(pop, acc, S):
+    """Batched oracle: pop (N, P, M); acc (N, M); S (N, M, M) ->
+    (strength (N, P), diversity (N, P))."""
+    return jax.vmap(ensemble_fitness_ref)(pop, acc, S)

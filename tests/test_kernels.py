@@ -5,8 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ensemble_fitness.kernel import ensemble_fitness
-from repro.kernels.ensemble_fitness.ref import ensemble_fitness_ref
+from repro.kernels.ensemble_fitness.kernel import (ensemble_fitness,
+                                                   ensemble_fitness_batched)
+from repro.kernels.ensemble_fitness.ref import (ensemble_fitness_batched_ref,
+                                                ensemble_fitness_ref)
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
@@ -27,6 +29,26 @@ def test_ensemble_fitness(P, M, dtype):
     s0, d0 = ensemble_fitness_ref(pop, acc, S)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), atol=1e-5)
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d0), atol=1e-5)
+
+
+@pytest.mark.parametrize("N,P,M", [(1, 100, 50), (4, 64, 24), (3, 129, 16)])
+def test_ensemble_fitness_batched(N, P, M):
+    """Client-batched kernel (grid folds the client dim into the
+    population tiling) vs the vmapped oracle AND the per-client kernel."""
+    key = jax.random.PRNGKey(N * P * M)
+    ks = jax.random.split(key, 3)
+    pop = (jax.random.uniform(ks[0], (N, P, M)) < 0.3).astype(jnp.float32)
+    acc = jax.random.uniform(ks[1], (N, M))
+    S = jax.random.uniform(ks[2], (N, M, M))
+    S = (S + jnp.swapaxes(S, 1, 2)) / 2
+    s1, d1 = ensemble_fitness_batched(pop, acc, S, interpret=True)
+    s0, d0 = ensemble_fitness_batched_ref(pop, acc, S)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d0), atol=1e-5)
+    for n in range(N):  # per-client kernel agrees slot for slot
+        sn, dn = ensemble_fitness(pop[n], acc[n], S[n], interpret=True)
+        np.testing.assert_allclose(np.asarray(sn), np.asarray(s1[n]), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(dn), np.asarray(d1[n]), atol=1e-6)
 
 
 @pytest.mark.parametrize("B,H,KV,Sq,Sk,hd", [
