@@ -29,5 +29,10 @@ def timed(fn, *args, repeat=3, **kw):
     return out, dt
 
 
+ROWS = []  # every row() call lands here; run.py can dump them as JSON
+
+
 def row(name, us, derived=""):
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)

@@ -169,6 +169,80 @@ def bench_ensemble_fitness_kernel():
         "CPU interpret mode; compiled path is TPU-only")
 
 
+def bench_gossip_scale():
+    """Gossip transport at 16/64/128 clients: bytes on the wire
+    (prediction-matrix vs checkpoint exchange), streaming-store eviction
+    counts at capacity 16, message-loss counters, and the one-shot
+    batched selection latency over the full fleet."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import row, timed
+    from repro.core.bench import (BenchEntry, StreamingPredictionStore,
+                                  stack_stores)
+    from repro.core.nsga2 import NSGAConfig, client_keys
+    from repro.core.selection import select_ensembles
+    from repro.fl.scheduler import AsyncConfig, simulate_async
+    from repro.fl.topology import make_topology
+    from repro.p2p import (ChurnConfig, ChurnSchedule, GossipConfig,
+                           GossipProtocol, GossipTransport, TransportConfig,
+                           checkpoint_bytes, prediction_matrix_bytes)
+
+    V, C, MPC, CAP = 128, 8, 2, 16
+    n_params = 250_000  # checkpoint-exchange baseline (width-16 CNN scale)
+    cfg = NSGAConfig(pop_size=32, generations=10, k=5, seed=0)
+    for n in (16, 64, 128):
+        rng = np.random.default_rng(n)
+        stores = [StreamingPredictionStore(
+            c, CAP, np.zeros((V, 2), np.float32),
+            rng.integers(0, C, V), C) for c in range(n)]
+        nb = make_topology("small_world", n, k=4, seed=0)
+        churn = ChurnSchedule(ChurnConfig(availability_beta=0.1,
+                                          leave_prob=0.05, seed=0), n)
+        gossip = GossipProtocol(GossipConfig(mode="push", seed=0), nb,
+                                churn=churn)
+        transport = GossipTransport(
+            TransportConfig(base_latency=0.05, drop_prob=0.1,
+                            bandwidth=50e6, inbox_capacity=64, seed=0),
+            n, lambda s, d, k: prediction_matrix_bytes(V, C))
+
+        def on_add(c, key, t, stores=stores, rng=rng):
+            owner, m = key
+            p = rng.random((V, C)).astype(np.float32)
+            stores[c].add(BenchEntry(model_id=owner * MPC + m, owner=owner,
+                                     family="f",
+                                     predict=lambda x: p[:len(x)]),
+                          preds=p / p.sum(1, keepdims=True), t=t)
+
+        acfg = AsyncConfig(n_clients=n, models_per_client=MPC,
+                           select_debounce=0.5, seed=0)
+        t0 = time.perf_counter()
+        simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
+                       on_add=on_add, transport=transport, gossip=gossip,
+                       churn=churn)
+        dt_sim = time.perf_counter() - t0
+        evictions = sum(s.evictions for s in stores)
+        pred_bytes = transport.stats.bytes_sent
+        msgs = transport.stats.n_sent
+        ckpt_bytes = msgs * checkpoint_bytes(n_params)
+        row(f"gossip_sim_N{n}", dt_sim * 1e6,
+            f"msgs={msgs} pred_MB={pred_bytes/1e6:.1f} "
+            f"ckpt_MB={ckpt_bytes/1e6:.0f} "
+            f"ratio={ckpt_bytes/max(pred_bytes,1):.0f}x "
+            f"evictions={evictions} "
+            f"dropped={transport.stats.n_dropped_link}")
+
+        # one-shot batched selection latency over the whole fleet
+        preds, labels, masks = stack_stores(stores)
+        keys = client_keys(cfg.seed, np.arange(n))
+        jp, jl, jm = (jnp.asarray(preds), jnp.asarray(labels),
+                      jnp.asarray(masks))
+        _, dt_sel = timed(lambda: jax.block_until_ready(select_ensembles(
+            jp, jl, cfg, keys=keys, model_mask=jm)["chromosome"]),
+            repeat=2)
+        row(f"gossip_select_N{n}", dt_sel * 1e6,
+            f"capacity={CAP} us_per_client={dt_sel*1e6/n:.0f}")
+
+
 def bench_partition_fig4():
     """Fig 4: partition skew vs alpha."""
     from benchmarks.common import row
@@ -203,7 +277,7 @@ def bench_roofline_summary():
             f"dominant={r['dominant']} useful={r['useful_ratio'] or 0:.2f}")
 
 
-def main(smoke: bool = False) -> None:
+def main(smoke: bool = False, json_path: str = None) -> None:
     print("name,us_per_call,derived")
     if not smoke:
         local_acc, res = bench_table1_accuracy()
@@ -211,11 +285,18 @@ def main(smoke: bool = False) -> None:
         bench_table3_scalability()
     bench_table4_cost()
     bench_selection_throughput()
+    bench_gossip_scale()
     bench_nsga2_microbench()
     bench_ensemble_fitness_kernel()
     bench_partition_fig4()
     if not smoke:
         bench_roofline_summary()
+    if json_path:
+        import json
+        from benchmarks.common import ROWS
+        with open(json_path, "w") as f:
+            json.dump(ROWS, f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {json_path}")
 
 
 if __name__ == "__main__":
@@ -223,4 +304,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: skip the model-training tables")
-    main(ap.parse_args().smoke)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump all rows as a JSON array (CI artifact)")
+    args = ap.parse_args()
+    main(args.smoke, args.json)

@@ -57,17 +57,38 @@ class PredictionStore:
         self.labels[:self.n_val] = y_val
         self.mask = np.zeros((capacity,), bool)
         self.entries: List[Optional[BenchEntry]] = [None] * capacity
+        # contribution stats + slot generations (streaming-store eviction
+        # and the engine's cached-chromosome invalidation — DESIGN.md §6;
+        # for the unbounded store generations simply never change)
+        self.hits = np.zeros((capacity,), np.int64)
+        self.last_used = np.zeros((capacity,), np.float64)
+        self.slot_gen = np.zeros((capacity,), np.int64)
+        self.evictions = 0
 
-    def add(self, entry: BenchEntry, preds: Optional[np.ndarray] = None):
-        """Materialize `entry` into its slot. `preds` short-circuits the
-        forward pass when the (V, C) matrix is already known (batched
-        multi-model predict in the driver, or a peer shipped the matrix)."""
-        slot = entry.model_id
+    def _materialize(self, slot: int, entry: BenchEntry,
+                     preds: Optional[np.ndarray], t: float):
         if preds is None:
             preds = entry.predict(self.x_val)
         self.preds[slot, :self.n_val] = np.asarray(preds, np.float32)[:self.n_val]
         self.mask[slot] = True
         self.entries[slot] = entry
+        self.last_used[slot] = t
+
+    def add(self, entry: BenchEntry, preds: Optional[np.ndarray] = None,
+            t: float = 0.0):
+        """Materialize `entry` into its slot. `preds` short-circuits the
+        forward pass when the (V, C) matrix is already known (batched
+        multi-model predict in the driver, or a peer shipped the matrix).
+        `t` is the virtual arrival time (recency input to eviction)."""
+        self._materialize(entry.model_id, entry, preds, t)
+        return entry.model_id
+
+    def note_selection(self, selected: np.ndarray, t: float = 0.0):
+        """The engine selected these slots at time t — the contribution
+        signal the streaming store's eviction policy ranks by."""
+        sel = np.asarray(selected, bool)
+        self.hits[sel] += 1
+        self.last_used[sel] = t
 
     @property
     def n_present(self) -> int:
@@ -106,6 +127,77 @@ class PredictionStore:
                 continue
             out[i] = e.predict(x)
         return out
+
+
+class StreamingPredictionStore(PredictionStore):
+    """Bounded store for unbounded model churn (DESIGN.md §6).
+
+    Physical capacity is FIXED; global model ids are remapped onto
+    physical slots (`slot_of`), and when the store is full an incoming
+    model evicts the occupant with the lowest contribution score —
+    ranked by (selection hits, last-used time, slot index), i.e. evict
+    the least-selected, then stalest, slot. Local models are pinned
+    (`protect_local`): the negative-transfer fallback must always be
+    servable from the store.
+
+    Slot remapping is what keeps `stack_stores` alignment intact:
+    surviving slots never move, an evicted slot's row is zeroed and
+    masked off (so it drops out of the next stacked batch), and each
+    remap bumps `slot_gen[slot]` so the engine can detect that a cached
+    chromosome points at a slot whose occupant changed underneath it.
+    """
+
+    def __init__(self, client: int, capacity: int, x_val: np.ndarray,
+                 y_val: np.ndarray, n_classes: int,
+                 v_pad: Optional[int] = None, protect_local: bool = True):
+        super().__init__(client, capacity, x_val, y_val, n_classes,
+                         v_pad=v_pad)
+        self.protect_local = protect_local
+        self.slot_of = {}               # global model id -> physical slot
+        self.n_rejected = 0             # adds refused (everything pinned)
+
+    def _evictable(self) -> np.ndarray:
+        occ = self.mask.copy()
+        if self.protect_local:
+            occ &= ~self.is_local()
+        return occ
+
+    def _evict_one(self) -> Optional[int]:
+        cand = np.flatnonzero(self._evictable())
+        if len(cand) == 0:
+            return None
+        order = np.lexsort((cand, self.last_used[cand], self.hits[cand]))
+        slot = int(cand[order[0]])
+        gone = self.entries[slot]
+        del self.slot_of[gone.model_id]
+        self.entries[slot] = None
+        self.mask[slot] = False
+        self.preds[slot] = 0.0
+        self.hits[slot] = 0
+        self.last_used[slot] = 0.0
+        self.slot_gen[slot] += 1        # invalidates cached chromosomes
+        self.evictions += 1
+        return slot
+
+    def add(self, entry: BenchEntry, preds: Optional[np.ndarray] = None,
+            t: float = 0.0):
+        """Admit (or refresh) a model; evicts when full. Returns the
+        physical slot, or None when the add was refused (store full of
+        pinned local models)."""
+        gid = entry.model_id
+        slot = self.slot_of.get(gid)
+        if slot is None:
+            free = np.flatnonzero(~self.mask)
+            if len(free):
+                slot = int(free[0])
+            else:
+                slot = self._evict_one()  # bumps slot_gen
+                if slot is None:
+                    self.n_rejected += 1
+                    return None
+            self.slot_of[gid] = slot
+        self._materialize(slot, entry, preds, t)
+        return slot
 
 
 def stack_stores(stores, clients=None, v_to: Optional[int] = None):

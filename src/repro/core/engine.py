@@ -53,10 +53,16 @@ class SelectionEngine:
         """A client is selectable once it can fill an ensemble."""
         return max(1, self.nsga.k)
 
-    def select(self, clients: Optional[Iterable[int]] = None) -> Dict[int, dict]:
+    def select(self, clients: Optional[Iterable[int]] = None,
+               t: float = 0.0) -> Dict[int, dict]:
         """Run ONE vmapped NSGA-II over `clients` (default: all) and cache
         per-client results. Clients whose stores cannot fill an ensemble
-        yet are skipped. Returns {client: selection dict}."""
+        yet are skipped. Returns {client: selection dict}.
+
+        `t` is the virtual time of the selection: it stamps the stores'
+        contribution stats (`note_selection`) that drive streaming-store
+        eviction, and each result snapshots the store's slot generations
+        so `chromosome` can detect eviction underneath a cached answer."""
         if clients is None:
             clients = range(len(self.stores))
         ready = [c for c in clients if self.stores[c].n_present >= self.min_models()]
@@ -72,18 +78,36 @@ class SelectionEngine:
         fresh = {}
         for i, c in enumerate(ready):
             res = {k: np.asarray(v[i]) for k, v in out.items()}
+            res["slot_gen"] = self.stores[c].slot_gen.copy()
+            self.stores[c].note_selection(
+                np.asarray(res["chromosome"]) > 0.5, t)
             self.results[c] = res
             fresh[c] = res
         return fresh
 
     # ---- serving ------------------------------------------------------
+    @staticmethod
+    def _stale(store, res, chrom: np.ndarray) -> bool:
+        """Does this cached chromosome reference a slot that was evicted
+        (mask dropped) or remapped (generation bumped) since selection?"""
+        sel = chrom > 0.5
+        if not store.mask[sel].all():
+            return True
+        gen = res.get("slot_gen")
+        return gen is not None and bool(
+            (store.slot_gen[sel] != gen[sel]).any())
+
     def chromosome(self, c: int) -> np.ndarray:
         """The client's current ensemble, falling back to the local-only
         chromosome (negative-transfer safety valve) when no selection has
-        run yet or the selected mask is empty."""
+        run yet, the selected mask is empty, or — streaming stores — a
+        selected slot was evicted/remapped since the selection ran (the
+        slot-generation snapshot no longer matches the store)."""
         store = self.stores[c]
         res = self.results.get(c)
         chrom = None if res is None else np.asarray(res["chromosome"])
+        if chrom is not None and self._stale(store, res, chrom):
+            chrom = None
         if chrom is None or (chrom > 0.5).sum() == 0:
             present = store.mask.astype(np.float32)
             chrom = np.asarray(local_only_chromosome(

@@ -27,7 +27,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.bench import BenchEntry, PredictionStore
+from repro.core.bench import (BenchEntry, PredictionStore,
+                              StreamingPredictionStore)
 from repro.core.engine import SelectionEngine
 from repro.core.nsga2 import NSGAConfig
 from repro.fl.client import (ClientData, accuracy, predict_probs,
@@ -51,6 +52,8 @@ class FedPAEConfig:
     patience: int = 6
     width: int = 16
     use_kernel: bool = False
+    store_capacity: Optional[int] = None  # bounded streaming stores (§6);
+                                          # None = one slot per global model
     seed: int = 0
 
 
@@ -98,11 +101,18 @@ def _make_entry(owner: int, fam: str, fam_idx: int, models, ccfg,
 
 def _empty_stores(datasets, cfg: FedPAEConfig, n_classes: int):
     """Slot-aligned stores: slot owner*F+fam_idx on every client, padded
-    to one common validation width so all stacks share a jit signature."""
+    to one common validation width so all stacks share a jit signature.
+    With `store_capacity` set (and smaller than the global model count)
+    each client gets a bounded streaming store with contribution-aware
+    eviction instead (DESIGN.md §6)."""
     F = len(cfg.families)
-    capacity = len(datasets) * F
+    full_capacity = len(datasets) * F
     v_max = max(len(d.y_va) for d in datasets)
-    return [PredictionStore(c, capacity, d.x_va, d.y_va, n_classes,
+    if cfg.store_capacity is not None and cfg.store_capacity < full_capacity:
+        return [StreamingPredictionStore(c, cfg.store_capacity, d.x_va,
+                                         d.y_va, n_classes, v_pad=v_max)
+                for c, d in enumerate(datasets)]
+    return [PredictionStore(c, full_capacity, d.x_va, d.y_va, n_classes,
                             v_pad=v_max)
             for c, d in enumerate(datasets)]
 
@@ -149,7 +159,9 @@ def run_fedpae(datasets, n_classes: int, cfg: FedPAEConfig,
         local_fracs.append(float((mask & stores[c].is_local()).sum()
                                  / max(1, mask.sum())))
         chroms.append(chrom)
-        member_accs.append(np.asarray(engine.results[c]["member_acc"]))
+        res = engine.results.get(c)  # absent when the store couldn't fill
+        member_accs.append(np.asarray(res["member_acc"]) if res is not None
+                           else np.full(stores[c].capacity, np.nan))
     return FedPAEResult(
         test_acc=np.array(accs), local_frac=np.array(local_fracs),
         chromosomes=chroms, member_val_acc=member_accs,
@@ -159,10 +171,13 @@ def run_fedpae(datasets, n_classes: int, cfg: FedPAEConfig,
 def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
                      acfg: Optional[AsyncConfig] = None,
                      models=None, ccfg=None,
-                     train_cost: Optional[Callable] = None) -> AsyncFedPAEResult:
+                     train_cost: Optional[Callable] = None,
+                     transport=None, gossip=None, churn=None) -> AsyncFedPAEResult:
     """The unified async driver: virtual-clock simulation where arrivals
     incrementally materialize the stores and debounced select events run
-    REAL batched re-selection through the shared engine."""
+    REAL batched re-selection through the shared engine. The optional
+    `transport`/`gossip`/`churn` p2p layers (repro.p2p) make the exchange
+    lossy, multi-hop, and churn-aware (DESIGN.md §6)."""
     n = len(datasets)
     if models is None:
         models, ccfg = train_all_clients(datasets, cfg, n_classes)
@@ -178,16 +193,18 @@ def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
 
     def on_add(c, model_key, t):
         owner, m = model_key
-        stores[c].add(_make_entry(owner, cfg.families[m], m, models, ccfg, F))
+        stores[c].add(_make_entry(owner, cfg.families[m], m, models, ccfg, F),
+                      t=t)
 
     def on_select_batch(clients, bench_ids, t):
-        fresh = engine.select(clients)
+        fresh = engine.select(clients, t=t)
         return {c: float(r["val_accuracy"]) for c, r in fresh.items()}
 
     trace = simulate_async(
         acfg, neighbors,
         train_cost=train_cost or (lambda c, m: 1.0 + 0.3 * m),
-        on_add=on_add, on_select_batch=on_select_batch)
+        on_add=on_add, on_select_batch=on_select_batch,
+        transport=transport, gossip=gossip, churn=churn)
 
     accs = [accuracy(engine.serve(c, d.x_te)[0], d.y_te)
             for c, d in enumerate(datasets)]

@@ -107,7 +107,9 @@ def select_ensembles(probs_val, labels_val, nsga: NSGAConfig,
 
 
 def local_only_chromosome(is_local, k: int):
-    """The all-local fallback ensemble (negative-transfer safety valve)."""
+    """The all-local fallback ensemble (negative-transfer safety valve):
+    up to k LOCAL members and nothing else — with fewer than k local
+    models the ensemble is smaller, never padded with remote slots."""
     idx = jnp.argsort(~is_local)  # locals first
     chrom = jnp.zeros(is_local.shape, jnp.float32)
-    return chrom.at[idx[:k]].set(1.0)
+    return chrom.at[idx[:k]].set(1.0) * is_local.astype(jnp.float32)

@@ -13,9 +13,22 @@ Events:
 Selection is DEBOUNCED and BATCHED: arrivals schedule the client's select
 on the next tick of a `select_debounce`-spaced grid, so clients whose
 arrivals land in the same window share one select timestamp, and the loop
-drains all same-time select events into a single `on_select_batch` call —
-which the unified engine (core/engine.py) answers with one vmapped
-NSGA-II run covering every ready client.
+drains all same-TICK select events (integer grid indices, robust to FP
+error in the tick times) into a single `on_select_batch` call — which the
+unified engine (core/engine.py) answers with one vmapped NSGA-II run
+covering every ready client.
+
+The exchange layer is pluggable (DESIGN.md §6):
+  - `transport` (p2p.GossipTransport): per-edge latency/bandwidth/drop and
+    bounded inboxes decide each recv's delay — or loss — instead of the
+    flat `link_latency`;
+  - `gossip` (p2p.GossipProtocol): epidemic relay with version-vector
+    dedupe instead of single-hop broadcast;
+  - `churn` (p2p.ChurnSchedule): offline clients neither send nor
+    receive; departed clients' models stop propagating.
+All latency draws come from per-(src, dst, model) fold_in-style streams
+(`p2p.transport.edge_rng`), never from a shared rng consumed in event
+order, so a trace is a pure function of the seed.
 """
 from __future__ import annotations
 
@@ -25,6 +38,8 @@ import math
 from typing import Callable, Optional
 
 import numpy as np
+
+from repro.p2p.transport import edge_rng
 
 
 @dataclasses.dataclass
@@ -42,19 +57,21 @@ class AsyncTrace:
     events: list                       # (time, kind, client, payload)
     bench_sizes: dict                  # client -> [(t, size)]
     selections: dict                   # client -> [(t, val_acc)]
+    net: Optional[dict] = None         # transport/gossip/churn counters
 
 
-def _next_select_tick(t: float, debounce: float) -> float:
-    """Quantize to the debounce grid so concurrent arrivals coalesce."""
-    if debounce <= 0:
-        return t
-    return (math.floor(t / debounce) + 1) * debounce
+def _select_tick(t: float, debounce: float) -> int:
+    """Integer index of the next debounce-grid tick after t. Comparing
+    tick INDICES (not the float times reconstructed from them) is what
+    makes same-window coalescing robust to FP error in the grid."""
+    return math.floor(t / debounce) + 1
 
 
 def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                    on_select: Optional[Callable] = None,
                    on_add: Optional[Callable] = None,
-                   on_select_batch: Optional[Callable] = None) -> AsyncTrace:
+                   on_select_batch: Optional[Callable] = None,
+                   transport=None, gossip=None, churn=None) -> AsyncTrace:
     """train_cost(client, local_idx) -> virtual duration of that training.
     on_add(client, model_key, t) — a model (own or peer) entered the
       client's bench; the engine uses this to incrementally materialize
@@ -63,68 +80,122 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     on_select_batch(clients, {client: bench_ids}, t) -> {client: val_acc}
       — preferred: all clients whose debounced select fires at time t are
       handed over in ONE call for batched (vmapped) re-selection.
+    transport/gossip/churn — optional p2p layers (see module docstring);
+      with none given the legacy single-hop, lossless exchange runs, but
+      with per-edge deterministic latency streams.
 
     Returns the full event trace — tests assert gossip convergence and
-    monotone bench growth on it.
+    monotone bench growth on it. `trace.net` carries the p2p counters
+    (bytes on wire, drops, dedups, offline losses) when layers are given.
     """
     rng = np.random.default_rng(cfg.seed)
     speeds = np.exp(rng.normal(0, cfg.speed_lognorm_sigma, cfg.n_clients))
-    q = []  # (time, seq, kind, client, payload)
+    q = []  # (time, seq, kind, client, payload, src)
     seq = 0
     bench = {c: set() for c in range(cfg.n_clients)}
     pending_select = set()
+    n_lost_offline = 0  # sends/recvs swallowed because an endpoint was away
     trace = AsyncTrace(events=[], bench_sizes={c: [] for c in range(cfg.n_clients)},
                        selections={c: [] for c in range(cfg.n_clients)})
     want_select = on_select is not None or on_select_batch is not None
 
-    def schedule_select(c, t):
+    def push(t, kind, c, payload, src=-1):
         nonlocal seq
+        heapq.heappush(q, (t, seq, kind, c, payload, src))
+        seq += 1
+
+    def schedule_select(c, t):
         if c in pending_select:
             return
         pending_select.add(c)
-        heapq.heappush(q, (_next_select_tick(t, cfg.select_debounce),
-                           seq, "select", c, None))
-        seq += 1
+        if cfg.select_debounce > 0:
+            tick = _select_tick(t, cfg.select_debounce)
+            push(tick * cfg.select_debounce, "select", c, tick)
+        else:
+            push(t, "select", c, None)
 
     def record_selection(c, t, acc):
         if acc is not None:
             trace.selections[c].append((t, float(acc)))
 
+    def send_model(src, dst, key, t):
+        """One message through the exchange layer: churn gates the sender,
+        the transport (or the legacy per-edge stream) prices the link."""
+        nonlocal n_lost_offline
+        if churn is not None and not churn.is_online(src, t):
+            n_lost_offline += 1
+            return
+        if gossip is not None:
+            gossip.note_sent(src, dst, key)
+        if transport is not None:
+            arrival = transport.send(src, dst, key, t)
+            if arrival is None:
+                return
+        else:
+            lat = cfg.link_latency * (1 + edge_rng(cfg.seed, src, dst,
+                                                   key).random())
+            arrival = t + lat
+        push(arrival, "recv", dst, key, src)
+
+    def admit(c, key, t):
+        """A new model enters client c's bench."""
+        bench[c].add(key)
+        trace.bench_sizes[c].append((t, len(bench[c])))
+        if on_add is not None:
+            on_add(c, key, t)
+
     for c in range(cfg.n_clients):
-        t_done = 0.0
+        t_done = float(churn.join[c]) if churn is not None else 0.0
         for m in range(cfg.models_per_client):
             t_done += speeds[c] * train_cost(c, m)
-            heapq.heappush(q, (t_done, seq, "trained", c, (c, m)))
-            seq += 1
+            push(t_done, "trained", c, (c, m))
 
     while q:
-        t, _, kind, c, payload = heapq.heappop(q)
-        trace.events.append((t, kind, c, payload))
+        t, _, kind, c, payload, src = heapq.heappop(q)
+        trace.events.append((t, kind, c,
+                             None if kind == "select" else payload))
         if kind == "trained":
-            bench[c].add(payload)
-            trace.bench_sizes[c].append((t, len(bench[c])))
-            if on_add is not None:
-                on_add(c, payload, t)
+            if churn is not None and churn.departed(c, t):
+                continue  # client left before finishing this training
+            admit(c, payload, t)
             if want_select:  # own models also re-trigger selection
                 schedule_select(c, t)
-            for nb in neighbors[c]:
-                lat = cfg.link_latency * (1 + rng.random())
-                heapq.heappush(q, (t + lat, seq, "recv", nb, payload))
-                seq += 1
+            if gossip is not None:
+                targets = gossip.on_local(c, payload, t)
+            else:
+                targets = [(nb, payload) for nb in neighbors[c]]
+            for dst, key in targets:
+                send_model(c, dst, key, t)
         elif kind == "recv":
-            if payload not in bench[c]:
-                bench[c].add(payload)
-                trace.bench_sizes[c].append((t, len(bench[c])))
-                if on_add is not None:
-                    on_add(c, payload, t)
+            away = churn is not None and not churn.is_online(c, t)
+            if transport is not None:
+                transport.deliver(src, c, payload, lost=away)
+            if away:
+                n_lost_offline += 1  # receiver away: message is lost
+                continue
+            if gossip is not None:
+                accepted, forwards = gossip.on_receive(c, src, payload, t)
+                if accepted and payload not in bench[c]:
+                    admit(c, payload, t)
+                    schedule_select(c, t)
+                for dst, key in forwards:
+                    send_model(c, dst, key, t)
+            elif payload not in bench[c]:
+                admit(c, payload, t)
                 schedule_select(c, t)
         elif kind == "select":
             pending_select.discard(c)
             ready = [c]
             if on_select_batch is not None:
-                # drain every same-tick select into one batched call
-                while q and q[0][0] == t and q[0][2] == "select":
-                    t2, _, _, c2, _ = heapq.heappop(q)
+                # drain every same-tick select into one batched call;
+                # `payload` holds the integer grid index, so coalescing
+                # never depends on float equality of reconstructed times
+                def same_tick(entry):
+                    return entry[2] == "select" and (
+                        entry[4] == payload if payload is not None
+                        else entry[0] == t)
+                while q and same_tick(q[0]):
+                    t2, _, _, c2, _, _ = heapq.heappop(q)
                     trace.events.append((t2, "select", c2, None))
                     pending_select.discard(c2)
                     ready.append(c2)
@@ -134,4 +205,11 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                     record_selection(b, t, accs.get(b))
             elif on_select is not None:
                 record_selection(c, t, on_select(c, sorted(bench[c]), t))
+
+    if transport is not None or gossip is not None or churn is not None:
+        trace.net = {"lost_offline": n_lost_offline}
+        if transport is not None:
+            trace.net["transport"] = transport.stats.as_dict()
+        if gossip is not None:
+            trace.net["gossip"] = gossip.stats.as_dict()
     return trace

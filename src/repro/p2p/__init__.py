@@ -1,0 +1,14 @@
+"""Simulated peer-to-peer substrate: transport links, gossip protocol,
+and client churn (DESIGN.md §6). The async scheduler composes these."""
+from repro.p2p.churn import ChurnConfig, ChurnSchedule
+from repro.p2p.gossip import GossipConfig, GossipProtocol, GossipStats
+from repro.p2p.transport import (GossipTransport, TransportConfig,
+                                 TransportStats, checkpoint_bytes, edge_rng,
+                                 prediction_matrix_bytes)
+
+__all__ = [
+    "ChurnConfig", "ChurnSchedule",
+    "GossipConfig", "GossipProtocol", "GossipStats",
+    "GossipTransport", "TransportConfig", "TransportStats",
+    "checkpoint_bytes", "edge_rng", "prediction_matrix_bytes",
+]

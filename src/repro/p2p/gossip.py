@@ -1,0 +1,126 @@
+"""Push / push-pull gossip with per-model version vectors.
+
+The seed scheduler broadcast a trained model one hop to its neighbors and
+stopped — fine on a full graph, silent partitions on anything sparse.
+This layer makes model dissemination an epidemic: every accepted model is
+re-forwarded, and per-model VERSION VECTORS keep the epidemic from
+flooding forever:
+
+  - `have[c]`: {model_key: version} — what client c holds;
+  - `peer_has[c][dst]`: what c believes dst already holds (updated on
+    every send AND every receive — receiving key from src proves src has
+    it), so re-broadcasts dedupe instead of ping-ponging;
+  - a stale arrival (version <= held version) is counted and dropped.
+
+`push_pull` additionally anti-entropies in reverse: when c accepts a
+model from src, c pushes back everything it holds that (it believes) src
+lacks — one round of pairwise reconciliation per new arrival.
+
+Churn integration: models owned by a permanently departed client are no
+longer re-forwarded (`n_suppressed`), so a churned-out client's models
+stop propagating while remaining usable wherever they already landed.
+
+The protocol only *decides* targets; the scheduler performs the sends
+through the transport and reports them back via `note_sent`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.p2p.churn import ChurnSchedule
+from repro.p2p.transport import ModelKey
+
+_GOSSIP_SALT = 0x41C64E6D
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    mode: str = "push"          # "push" | "push_pull"
+    fanout: int = 0             # forward to at most this many peers; 0 = all
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class GossipStats:
+    n_accepted: int = 0
+    n_dedup: int = 0            # stale version arrivals dropped
+    n_suppressed: int = 0       # forwards of departed owners' models
+    n_pull: int = 0             # reverse-push messages (push_pull mode)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class GossipProtocol:
+    """One fleet's gossip state machine (decides who forwards what)."""
+
+    def __init__(self, cfg: GossipConfig, neighbors,
+                 churn: Optional[ChurnSchedule] = None):
+        if cfg.mode not in ("push", "push_pull"):
+            raise ValueError(f"unknown gossip mode {cfg.mode!r}")
+        self.cfg = cfg
+        self.neighbors = [list(nb) for nb in neighbors]
+        self.churn = churn
+        n = len(self.neighbors)
+        self.have: List[Dict[ModelKey, int]] = [dict() for _ in range(n)]
+        self.peer_has: List[Dict[int, Set[ModelKey]]] = [
+            {dst: set() for dst in self.neighbors[c]} for c in range(n)]
+        self.stats = GossipStats()
+
+    # ---- helpers ------------------------------------------------------
+    def _targets(self, c: int, key: ModelKey, version: int, t: float,
+                 exclude: int = -1) -> List[int]:
+        """Neighbors that (as far as c knows) still need (key, version)."""
+        if self.churn is not None and self.churn.departed(key[0], t):
+            self.stats.n_suppressed += 1
+            return []
+        out = [dst for dst in self.neighbors[c]
+               if dst != exclude and key not in self.peer_has[c][dst]]
+        if self.cfg.fanout and len(out) > self.cfg.fanout:
+            # deterministic per-(client, model, version) subsample
+            rng = np.random.default_rng(
+                (_GOSSIP_SALT, self.cfg.seed, c, key[0], key[1], version))
+            out = sorted(rng.choice(out, self.cfg.fanout, replace=False)
+                         .tolist())
+        return out
+
+    def note_sent(self, c: int, dst: int, key: ModelKey) -> None:
+        """The scheduler actually handed (c -> dst, key) to the transport.
+        Push has no acks, so c optimistically assumes delivery."""
+        self.peer_has[c].setdefault(dst, set()).add(key)
+
+    # ---- protocol events ---------------------------------------------
+    def on_local(self, c: int, key: ModelKey, t: float,
+                 version: int = 0) -> List[Tuple[int, ModelKey]]:
+        """Client c produced (trained) a model: record and push."""
+        self.have[c][key] = version
+        return [(dst, key) for dst in self._targets(c, key, version, t)]
+
+    def on_receive(self, c: int, src: int, key: ModelKey, t: float,
+                   version: int = 0):
+        """Returns (accepted, forwards). `forwards` are (dst, key) sends
+        originating at c — the epidemic push plus, in push_pull mode, the
+        reverse reconciliation toward src."""
+        self.peer_has[c].setdefault(src, set()).add(key)
+        held = self.have[c].get(key)
+        if held is not None and held >= version:
+            self.stats.n_dedup += 1
+            return False, []
+        self.have[c][key] = version
+        self.stats.n_accepted += 1
+        forwards = [(dst, key)
+                    for dst in self._targets(c, key, version, t, exclude=src)]
+        if self.cfg.mode == "push_pull":
+            known_at_src = self.peer_has[c].setdefault(src, set())
+            for other in sorted(self.have[c]):
+                if other != key and other not in known_at_src:
+                    if self.churn is not None and \
+                            self.churn.departed(other[0], t):
+                        self.stats.n_suppressed += 1
+                        continue
+                    forwards.append((src, other))
+                    self.stats.n_pull += 1
+        return True, forwards

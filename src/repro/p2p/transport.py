@@ -1,0 +1,134 @@
+"""Simulated gossip transport: the link layer under the async simulator.
+
+Every peer-to-peer message (a model's prediction matrix, or — for the
+cost comparison — a full checkpoint) crosses a per-edge link with
+
+  - propagation latency drawn from a deterministic per-(src, dst, model)
+    stream (`edge_rng`, the numpy analogue of `jax.random.fold_in`), so a
+    trace is a pure function of the seed regardless of event pop order;
+  - a serialization term `nbytes / bandwidth` — transfer time scales with
+    message size, which is what makes the paper's §III-A low-storage
+    exchange (a (V, C) prediction matrix) quantifiably cheaper than
+    shipping `n_params` checkpoint floats (DESIGN.md §6);
+  - an i.i.d. drop probability per message attempt;
+  - a bounded per-destination inbox: messages in flight beyond
+    `inbox_capacity` are rejected at send time (backpressure, counted).
+
+The transport never touches the event queue — `send` returns the arrival
+time (or None when the message is lost) and the scheduler owns the heap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+ModelKey = Tuple[int, int]  # (owner client, local model index)
+
+_EDGE_SALT = 0x9E3779B9  # domain-separates edge streams from other rngs
+
+
+def edge_rng(seed: int, src: int, dst: int, key: ModelKey,
+             attempt: int = 0) -> np.random.Generator:
+    """Deterministic per-(src, dst, model, attempt) stream — fold_in style.
+
+    The draw depends only on the edge identity and the seed, never on how
+    many other events the simulator happened to process first, so traces
+    are reproducible under any heap tie-breaking."""
+    owner, idx = key
+    return np.random.default_rng((_EDGE_SALT, seed, src, dst, owner, idx,
+                                  attempt))
+
+
+def prediction_matrix_bytes(n_val: int, n_classes: int,
+                            bytes_per_value: int = 4) -> int:
+    """Wire size of the paper's low-storage exchange unit: the (V, C)
+    prediction matrix on the receiver's validation set."""
+    return n_val * n_classes * bytes_per_value
+
+
+def checkpoint_bytes(n_params: int, bytes_per_value: int = 4) -> int:
+    """Wire size of the naive exchange unit: the full parameter vector."""
+    return n_params * bytes_per_value
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    base_latency: float = 0.05      # propagation delay (virtual time)
+    jitter: float = 1.0             # latency *= (1 + jitter * U[0,1))
+    bandwidth: float = float("inf")  # bytes per virtual-time unit per link
+    drop_prob: float = 0.0          # i.i.d. loss per message attempt
+    inbox_capacity: int = 0         # max in-flight msgs per dst; 0 = unbounded
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TransportStats:
+    n_sent: int = 0                 # messages handed to the link layer
+    n_delivered: int = 0
+    n_dropped_link: int = 0         # lost to drop_prob
+    n_dropped_inbox: int = 0        # rejected by the bounded inbox
+    bytes_sent: int = 0
+    bytes_delivered: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class GossipTransport:
+    """Per-edge link model shared by the scheduler and the benchmarks.
+
+    `size_fn(src, dst, key) -> int` prices each message; the driver plugs
+    in prediction-matrix bytes (default) or checkpoint bytes (the cost
+    baseline). A message log (t_send, src, dst, key, outcome) supports
+    the churn tests and the bytes-on-wire curves."""
+
+    def __init__(self, cfg: TransportConfig, n_clients: int,
+                 size_fn: Callable[[int, int, ModelKey], int]):
+        self.cfg = cfg
+        self.size_fn = size_fn
+        self.inflight = np.zeros(n_clients, np.int64)
+        self._attempts: Dict[Tuple[int, int, ModelKey], int] = {}
+        self.stats = TransportStats()
+        self.log: list = []  # (t_send, src, dst, key, "ok"|"drop"|"inbox")
+
+    def send(self, src: int, dst: int, key: ModelKey,
+             t: float) -> Optional[float]:
+        """Price, maybe drop, maybe reject, else return the arrival time."""
+        nbytes = int(self.size_fn(src, dst, key))
+        self.stats.n_sent += 1
+        self.stats.bytes_sent += nbytes
+        edge = (src, dst, key)
+        attempt = self._attempts.get(edge, 0)
+        self._attempts[edge] = attempt + 1
+        rng = edge_rng(self.cfg.seed, src, dst, key, attempt)
+        # one stream decides (drop, jitter) so re-sends get fresh draws
+        # but the trace stays independent of global event order
+        dropped = rng.random() < self.cfg.drop_prob
+        jitter = rng.random()
+        if dropped:
+            self.stats.n_dropped_link += 1
+            self.log.append((t, src, dst, key, "drop"))
+            return None
+        if self.cfg.inbox_capacity and \
+                self.inflight[dst] >= self.cfg.inbox_capacity:
+            self.stats.n_dropped_inbox += 1
+            self.log.append((t, src, dst, key, "inbox"))
+            return None
+        self.inflight[dst] += 1
+        lat = self.cfg.base_latency * (1.0 + self.cfg.jitter * jitter)
+        if np.isfinite(self.cfg.bandwidth):
+            lat += nbytes / self.cfg.bandwidth
+        self.log.append((t, src, dst, key, "ok"))
+        return t + lat
+
+    def deliver(self, src: int, dst: int, key: ModelKey,
+                lost: bool = False) -> None:
+        """Called by the scheduler when the recv event fires: frees the
+        inbox slot always, and books the delivered bytes unless the
+        receiver lost the message (e.g. it was offline at arrival)."""
+        self.inflight[dst] -= 1
+        if not lost:
+            self.stats.n_delivered += 1
+            self.stats.bytes_delivered += int(self.size_fn(src, dst, key))

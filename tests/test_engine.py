@@ -174,6 +174,22 @@ def test_empty_selection_falls_back_to_local_only():
     assert np.isfinite(vote).all() and (vote.sum(1) > 0).all()
 
 
+def test_local_fallback_never_pads_with_remote_models():
+    """A client with fewer than ensemble_k local models must get a
+    SMALLER local-only fallback, not one padded with arbitrary remote
+    slots (the negative-transfer valve's whole point)."""
+    capacity, labels, mats = _make_world()
+    stores = _full_stores(capacity, labels, mats)
+    stores[2].mask[2 * M_PER + 2] = False  # client 2: only 2 locals left
+    engine = SelectionEngine(stores, CFG, ensemble_k=CFG.k)
+    chrom = engine.chromosome(2)
+    sel = np.flatnonzero(chrom > 0.5)
+    assert len(sel) == 2  # not padded up to k=3
+    assert all(s // M_PER == 2 for s in sel)
+    vote, _ = engine.serve(2, np.zeros((4, 2), np.float32))
+    assert np.isfinite(vote).all()
+
+
 def test_stack_stores_alignment():
     capacity, labels, mats = _make_world()
     stores = _full_stores(capacity, labels, mats)

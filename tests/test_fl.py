@@ -38,7 +38,7 @@ def test_split_fractions():
     assert len(set(tr) | set(va) | set(te)) == 1000
 
 
-@pytest.mark.parametrize("name", ["full", "ring", "random"])
+@pytest.mark.parametrize("name", ["full", "ring", "random", "small_world"])
 def test_topology_connected_and_symmetric(name):
     n = 12
     nb = make_topology(name, n, k=3, seed=0)
@@ -56,7 +56,7 @@ def test_topology_connected_and_symmetric(name):
     assert len(seen) == n
 
 
-@pytest.mark.parametrize("topo", ["full", "ring", "random"])
+@pytest.mark.parametrize("topo", ["full", "ring", "random", "small_world"])
 def test_async_gossip_every_model_reaches_every_client(topo):
     """On a connected graph with relay-on-receive = none (single hop), only
     full topology delivers everything directly; ring/random still record
@@ -86,6 +86,12 @@ def test_async_ordering_is_causal():
             trained_at[payload] = t
         elif kind == "recv":
             assert t >= trained_at[payload]
+
+
+def test_topology_k_too_large_raises():
+    for name in ("random", "small_world"):
+        with pytest.raises(ValueError, match="k < n"):
+            make_topology(name, 4, k=4)
 
 
 def test_baselines_two_round_smoke():

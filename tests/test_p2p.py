@@ -1,0 +1,444 @@
+"""P2P subsystem tests: transport determinism and accounting, gossip
+epidemic convergence + version-vector dedupe, churn semantics, bounded
+streaming stores with contribution-aware eviction, engine fallback on
+slot invalidation, and full-system 64-client determinism — all on
+synthetic prediction matrices (no CNN training)."""
+import numpy as np
+import pytest
+
+from repro.core.bench import (BenchEntry, PredictionStore,
+                              StreamingPredictionStore, stack_stores)
+from repro.core.engine import SelectionEngine
+from repro.core.nsga2 import NSGAConfig
+from repro.fl.scheduler import AsyncConfig, simulate_async
+from repro.fl.topology import make_topology
+from repro.p2p import (ChurnConfig, ChurnSchedule, GossipConfig,
+                       GossipProtocol, GossipTransport, TransportConfig,
+                       checkpoint_bytes, edge_rng, prediction_matrix_bytes)
+
+V, C = 64, 5
+
+
+def _pred_size_fn(src, dst, key):
+    return prediction_matrix_bytes(V, C)
+
+
+# ------------------------------------------------------------- transport
+
+def test_edge_streams_are_order_independent():
+    """The same (src, dst, model) message draws the same (drop, latency)
+    no matter how many other sends happened first."""
+    cfg = TransportConfig(base_latency=0.1, jitter=1.0, drop_prob=0.2,
+                          seed=3)
+    t1 = GossipTransport(cfg, 8, _pred_size_fn)
+    t2 = GossipTransport(cfg, 8, _pred_size_fn)
+    sends = [(s, d, (s, 0)) for s in range(8) for d in range(8) if s != d]
+    out1 = {(s, d, k): t1.send(s, d, k, 1.0) for s, d, k in sends}
+    out2 = {(s, d, k): t2.send(s, d, k, 1.0)
+            for s, d, k in reversed(sends)}
+    assert out1 == out2
+    assert any(a is None for a in out1.values())  # drops do occur
+    # re-sends of the same message get a fresh (attempt-indexed) draw
+    t1.send(0, 1, (0, 0), 5.0)
+    assert t1._attempts[(0, 1, (0, 0))] == 2
+
+
+def test_transfer_time_scales_with_message_size():
+    cfg = TransportConfig(base_latency=0.0, jitter=0.0, bandwidth=1000.0)
+    small = GossipTransport(cfg, 2, lambda s, d, k: 100)
+    big = GossipTransport(cfg, 2, lambda s, d, k: 10000)
+    assert small.send(0, 1, (0, 0), 0.0) == pytest.approx(0.1)
+    assert big.send(0, 1, (0, 0), 0.0) == pytest.approx(10.0)
+
+
+def test_drop_rate_and_byte_accounting():
+    cfg = TransportConfig(drop_prob=0.3, seed=0)
+    tr = GossipTransport(cfg, 50, _pred_size_fn)
+    n = 0
+    for s in range(50):
+        for d in range(50):
+            if s != d and tr.send(s, d, (s, 0), 0.0) is not None:
+                n += 1
+    total = 50 * 49
+    assert tr.stats.n_sent == total
+    assert tr.stats.n_dropped_link == total - n
+    assert abs(tr.stats.n_dropped_link / total - 0.3) < 0.05
+    assert tr.stats.bytes_sent == total * prediction_matrix_bytes(V, C)
+
+
+def test_bounded_inbox_rejects_then_recovers():
+    cfg = TransportConfig(drop_prob=0.0, inbox_capacity=2)
+    tr = GossipTransport(cfg, 4, _pred_size_fn)
+    assert tr.send(0, 1, (0, 0), 0.0) is not None
+    assert tr.send(2, 1, (2, 0), 0.0) is not None
+    assert tr.send(3, 1, (3, 0), 0.0) is None          # inbox full
+    assert tr.stats.n_dropped_inbox == 1
+    tr.deliver(0, 1, (0, 0))                            # frees a slot
+    assert tr.send(3, 1, (3, 0), 0.1) is not None
+
+
+def test_prediction_matrix_is_at_least_10x_cheaper_than_checkpoints():
+    """The paper's §III-A claim, quantified: shipping (V, C) prediction
+    matrices beats shipping n_params checkpoint floats by >= 10x for any
+    realistically-sized model."""
+    n_params = 50_000  # even the tiny width-12 test CNNs exceed this
+    assert checkpoint_bytes(n_params) >= 10 * prediction_matrix_bytes(V, C)
+
+
+# ---------------------------------------------------------------- gossip
+
+def _run_gossip(topo="ring", n=6, mode="push", transport_cfg=None,
+                churn=None, seed=0, mpc=2, debounce=0.1):
+    acfg = AsyncConfig(n_clients=n, models_per_client=mpc, seed=seed,
+                       select_debounce=debounce)
+    nb = make_topology(topo, n, k=4, seed=seed)
+    gossip = GossipProtocol(GossipConfig(mode=mode, seed=seed), nb,
+                            churn=churn)
+    transport = None
+    if transport_cfg is not None:
+        transport = GossipTransport(transport_cfg, n, _pred_size_fn)
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.1 * m,
+                           transport=transport, gossip=gossip, churn=churn)
+    return trace, gossip, transport
+
+
+@pytest.mark.parametrize("mode", ["push", "push_pull"])
+def test_gossip_floods_sparse_topologies(mode):
+    """Single-hop broadcast cannot cover a ring; epidemic relay must."""
+    n, mpc = 6, 2
+    trace, gossip, _ = _run_gossip(topo="ring", n=n, mode=mode, mpc=mpc)
+    final = {c: series[-1][1] for c, series in trace.bench_sizes.items()}
+    assert all(v == n * mpc for v in final.values())
+    if mode == "push_pull":
+        assert gossip.stats.n_pull >= 0  # reverse pushes are well-formed
+
+
+def test_version_vectors_dedupe_instead_of_flooding():
+    """On a dense graph the same model reaches a client over many paths;
+    version vectors must drop the duplicates (bench adds stay unique) and
+    peer-knowledge must suppress a chunk of the naive re-broadcasts."""
+    n, mpc = 8, 2
+    trace, gossip, _ = _run_gossip(topo="full", n=n, mode="push", mpc=mpc)
+    assert gossip.stats.n_dedup > 0
+    # every bench still converges with each model admitted exactly once
+    for c, series in trace.bench_sizes.items():
+        sizes = [s for _, s in series]
+        assert sizes == sorted(sizes) and sizes[-1] == n * mpc
+    # epidemic + suppression sends less than blind flooding would
+    n_sends = sum(1 for _, kind, *_ in trace.events if kind == "recv")
+    blind = n * mpc * n * (n - 1)  # every node re-broadcasts everything
+    assert n_sends < blind
+
+
+def test_gossip_trace_deterministic_and_seed_sensitive():
+    cfg = TransportConfig(base_latency=0.05, drop_prob=0.1, seed=0)
+    t1, _, tr1 = _run_gossip(topo="small_world", n=10, transport_cfg=cfg)
+    t2, _, tr2 = _run_gossip(topo="small_world", n=10, transport_cfg=cfg)
+    assert t1.events == t2.events
+    assert tr1.stats == tr2.stats
+    t3, _, _ = _run_gossip(topo="small_world", n=10,
+                           transport_cfg=TransportConfig(
+                               base_latency=0.05, drop_prob=0.1, seed=9),
+                           seed=9)
+    assert t3.events != t1.events
+
+
+# ----------------------------------------------------------------- churn
+
+def test_churn_schedule_is_deterministic():
+    cfg = ChurnConfig(availability_beta=0.3, leave_prob=0.3, seed=4)
+    a, b = ChurnSchedule(cfg, 16), ChurnSchedule(cfg, 16)
+    np.testing.assert_array_equal(a.p_online, b.p_online)
+    np.testing.assert_array_equal(a.leave, b.leave)
+    ts = np.linspace(0, 20, 101)
+    assert [a.is_online(3, t) for t in ts] == [b.is_online(3, t) for t in ts]
+
+
+def test_departed_clients_models_stop_propagating():
+    """After a client permanently leaves: (a) its own bench freezes, and
+    (b) nobody forwards its models anymore (the gossip layer suppresses
+    stale-owner re-broadcasts), so no send of its models appears in the
+    transport log after the departure time."""
+    n = 8
+    churn_cfg = ChurnConfig(availability_beta=0.0, leave_prob=0.5,
+                            leave_scale=1.0, seed=2)
+    churn = ChurnSchedule(churn_cfg, n)
+    assert np.isfinite(churn.leave).any(), "seed must produce departures"
+    cfg = TransportConfig(base_latency=0.05, seed=0)
+    trace, gossip, transport = _run_gossip(topo="full", n=n, mpc=3,
+                                           transport_cfg=cfg, churn=churn)
+    departed = np.flatnonzero(np.isfinite(churn.leave))
+    for d in departed:
+        leave_t = churn.leave[d]
+        for t_send, src, dst, key, _ in transport.log:
+            if key[0] == d:
+                assert t_send < leave_t, \
+                    f"model of departed client {d} sent at {t_send}"
+        sizes = [t for t, _ in trace.bench_sizes[d]]
+        assert all(t < leave_t for t in sizes)
+    assert gossip.stats.n_suppressed > 0
+
+
+# ---------------------------------------------------- scheduler satellites
+
+def test_same_window_selects_coalesce_into_one_batch():
+    """Identical speeds land every client's arrival in the same debounce
+    window; the tick-index drain must hand ALL of them to one batched
+    select call (the float-equality drain used to be FP-fragile here)."""
+    n = 8
+    acfg = AsyncConfig(n_clients=n, models_per_client=1,
+                       speed_lognorm_sigma=0.0, link_latency=0.001,
+                       select_debounce=0.1, seed=0)
+    nb = make_topology("full", n)
+    batches = []
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0,
+                           on_select_batch=lambda cs, b, t:
+                               batches.append(list(cs)) or {})
+    assert max(len(b) for b in batches) == n
+
+
+def test_legacy_link_latency_comes_from_edge_stream():
+    """Satellite: per-edge latency is a pure function of (seed, src, dst,
+    model), reproducible outside the simulator."""
+    acfg = AsyncConfig(n_clients=4, models_per_client=1, seed=5)
+    nb = make_topology("full", 4)
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0)
+    trained_at, seen = {}, set()
+    for t, kind, c, payload in trace.events:
+        if kind == "trained":
+            trained_at[payload] = t
+        elif kind == "recv" and (c, payload) not in seen:
+            seen.add((c, payload))
+            src = payload[0]
+            expect = acfg.link_latency * (
+                1 + edge_rng(acfg.seed, src, c, payload).random())
+            assert t - trained_at[payload] == pytest.approx(expect)
+    assert seen
+
+
+# -------------------------------------------------------- streaming store
+
+def _entry(gid, owner, preds=None):
+    return BenchEntry(model_id=gid, owner=owner, family="f",
+                      predict=lambda x: np.full((len(x), C), 1.0 / C,
+                                                np.float32))
+
+
+def _rand_preds(rng):
+    p = rng.random((V, C)).astype(np.float32)
+    return p / p.sum(1, keepdims=True)
+
+
+def test_streaming_store_never_exceeds_capacity():
+    rng = np.random.default_rng(0)
+    s = StreamingPredictionStore(0, 8, np.zeros((V, 2), np.float32),
+                                 rng.integers(0, C, V), C)
+    for gid in range(50):
+        s.add(_entry(gid, owner=gid % 7 + 1), preds=_rand_preds(rng),
+              t=float(gid))
+        assert s.n_present <= 8
+        assert len(s.slot_of) == s.n_present
+    assert s.evictions == 50 - 8
+    assert s.n_present == 8
+
+
+def test_evicted_slots_masked_out_of_stacked_batch():
+    rng = np.random.default_rng(1)
+    stores = []
+    for c in range(2):
+        s = StreamingPredictionStore(c, 4, np.zeros((V, 2), np.float32),
+                                     rng.integers(0, C, V), C)
+        for gid in range(4):
+            s.add(_entry(gid, owner=9), preds=_rand_preds(rng), t=float(gid))
+        stores.append(s)
+    slot = stores[0]._evict_one()
+    _, _, masks = stack_stores(stores)
+    assert masks[0, slot] == 0.0 and masks[0].sum() == 3
+    assert masks[1].sum() == 4
+    assert (stores[0].preds[slot] == 0).all()
+
+
+def test_eviction_ranks_by_hits_then_recency_and_pins_local():
+    rng = np.random.default_rng(2)
+    s = StreamingPredictionStore(3, 4, np.zeros((V, 2), np.float32),
+                                 rng.integers(0, C, V), C)
+    s.add(_entry(0, owner=3), preds=_rand_preds(rng), t=0.0)   # local: pinned
+    s.add(_entry(1, owner=0), preds=_rand_preds(rng), t=1.0)
+    s.add(_entry(2, owner=1), preds=_rand_preds(rng), t=2.0)
+    s.add(_entry(3, owner=2), preds=_rand_preds(rng), t=3.0)
+    selected = np.zeros(4, bool)
+    selected[[s.slot_of[0], s.slot_of[1]]] = True
+    s.note_selection(selected, t=4.0)         # models 0, 1 contribute
+    s.add(_entry(4, owner=0), preds=_rand_preds(rng), t=5.0)
+    # gid 2 (zero hits, older than gid 3) must be the eviction victim
+    assert 2 not in s.slot_of
+    assert {0, 1, 3, 4} == set(s.slot_of)
+    # drain everything evictable: the local model must survive
+    s.add(_entry(5, owner=5), preds=_rand_preds(rng), t=6.0)
+    s.add(_entry(6, owner=5), preds=_rand_preds(rng), t=7.0)
+    s.add(_entry(7, owner=5), preds=_rand_preds(rng), t=8.0)
+    assert 0 in s.slot_of
+    assert s.entries[s.slot_of[0]].owner == 3
+
+
+def test_streaming_store_refuses_when_everything_is_pinned():
+    rng = np.random.default_rng(3)
+    s = StreamingPredictionStore(2, 2, np.zeros((V, 2), np.float32),
+                                 rng.integers(0, C, V), C)
+    s.add(_entry(0, owner=2), preds=_rand_preds(rng))
+    s.add(_entry(1, owner=2), preds=_rand_preds(rng))
+    assert s.add(_entry(2, owner=0), preds=_rand_preds(rng)) is None
+    assert s.n_rejected == 1 and s.evictions == 0
+    assert {0, 1} == set(s.slot_of)
+
+
+def _quality_preds(rng, labels, quality):
+    correct = rng.random(len(labels)) < quality
+    pred = np.where(correct, labels,
+                    (labels + 1 + rng.integers(0, C - 1, len(labels))) % C)
+    out = np.full((len(labels), C), 0.05, np.float32)
+    out[np.arange(len(labels)), pred] = 0.8
+    return out / out.sum(1, keepdims=True)
+
+
+def test_engine_falls_back_when_selection_references_evicted_slot():
+    """Cached chromosome -> slot evicted underneath it -> serve must drop
+    to the local-only fallback, not serve the new occupant's predictions
+    under the old model's name."""
+    rng = np.random.default_rng(4)
+    labels = rng.integers(0, C, V)
+    cap = 6
+    store = StreamingPredictionStore(0, cap, np.zeros((V, 2), np.float32),
+                                     labels, C)
+    for gid in range(cap):  # gids 0,1 local; rest remote
+        owner = 0 if gid < 2 else gid
+        store.add(_entry(gid, owner=owner),
+                  preds=_quality_preds(rng, labels, 0.8), t=float(gid))
+    nsga = NSGAConfig(pop_size=16, generations=5, k=2, seed=0)
+    engine = SelectionEngine([store], nsga, ensemble_k=2)
+    engine.select(t=10.0)
+    chrom0 = engine.chromosome(0)
+    assert chrom0.sum() == 2
+    # evict a selected REMOTE slot by zeroing its hits and flooding adds
+    sel_slots = np.flatnonzero(chrom0 > 0.5)
+    victim = next(s for s in sel_slots if store.entries[s].owner != 0)
+    store.hits[:] = 0
+    store.hits[[s for s in range(cap) if s != victim]] = 5
+    store.add(_entry(99, owner=7), preds=_quality_preds(rng, labels, 0.3),
+              t=11.0)
+    assert store.slot_of[99] == victim  # new occupant under the old slot
+    assert store.slot_gen[victim] > 0
+    chrom = engine.chromosome(0)
+    sel = np.flatnonzero(chrom > 0.5)
+    assert len(sel) == 2
+    assert all(store.entries[s].owner == 0 for s in sel), \
+        "stale selection must fall back to local-only members"
+    vote, _ = engine.serve(0, np.zeros((5, 2), np.float32))
+    assert np.isfinite(vote).all()
+
+
+# ----------------------------------------------- full-system determinism
+
+def _make_world(n_clients, mpc, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = {c: rng.integers(0, C, V) for c in range(n_clients)}
+    mats = {}
+    for c in range(n_clients):
+        for owner in range(n_clients):
+            for m in range(mpc):
+                q = rng.uniform(0.6, 0.9) if owner == c else \
+                    rng.uniform(0.2, 0.8)
+                mats[(c, owner * mpc + m)] = _quality_preds(
+                    rng, labels[c], q)
+    return labels, mats
+
+
+def _drive_full_system(n=64, mpc=2, capacity=8, seed=0, drop=0.1):
+    labels, mats = _make_world(n, mpc, seed=17)  # world fixed; sim seeded
+    stores = [StreamingPredictionStore(c, capacity,
+                                       np.zeros((V, 2), np.float32),
+                                       labels[c], C)
+              for c in range(n)]
+    nsga = NSGAConfig(pop_size=8, generations=3, k=3, seed=seed)
+    engine = SelectionEngine(stores, nsga, ensemble_k=3)
+    nb = make_topology("small_world", n, k=4, seed=seed)
+    churn = ChurnSchedule(ChurnConfig(availability_beta=0.1,
+                                      leave_prob=0.05, seed=seed), n)
+    gossip = GossipProtocol(GossipConfig(mode="push", seed=seed), nb,
+                            churn=churn)
+    transport = GossipTransport(
+        TransportConfig(base_latency=0.05, drop_prob=drop,
+                        bandwidth=1e6, inbox_capacity=64, seed=seed),
+        n, _pred_size_fn)
+
+    def on_add(c, key, t):
+        owner, m = key
+        gid = owner * mpc + m
+        stores[c].add(_entry(gid, owner=owner), preds=mats[(c, gid)], t=t)
+
+    def on_select_batch(clients, bench, t):
+        return {c: float(r["val_accuracy"])
+                for c, r in engine.select(clients, t=t).items()}
+
+    acfg = AsyncConfig(n_clients=n, models_per_client=mpc,
+                       select_debounce=0.5, seed=seed)
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
+                           on_add=on_add, on_select_batch=on_select_batch,
+                           transport=transport, gossip=gossip, churn=churn)
+    return trace, engine, stores
+
+
+def test_64_client_gossip_run_is_deterministic():
+    """ISSUE acceptance: 64 clients, churn + 10% drops — same seed must
+    reproduce the identical event trace AND identical selections."""
+    t1, e1, s1 = _drive_full_system()
+    t2, e2, s2 = _drive_full_system()
+    assert t1.events == t2.events
+    assert t1.selections == t2.selections
+    assert t1.net == t2.net
+    for c in range(64):
+        np.testing.assert_array_equal(e1.chromosome(c), e2.chromosome(c))
+        assert s1[c].evictions == s2[c].evictions
+    assert t1.net["transport"]["bytes_sent"] > 0
+
+
+def test_bounded_store_tracks_unbounded_quality():
+    """Capacity-bounded stores with contribution-aware eviction must stay
+    close to unbounded stores on the synthetic workload (the example
+    checks the full-size 2-point claim; this is the fast proxy)."""
+    n, mpc = 12, 2
+    labels, mats = _make_world(n, mpc, seed=23)
+    accs = {}
+    for capacity in (8, n * mpc):
+        stores = [
+            (StreamingPredictionStore if capacity < n * mpc
+             else PredictionStore)(c, capacity,
+                                   np.zeros((V, 2), np.float32),
+                                   labels[c], C)
+            for c in range(n)]
+        nsga = NSGAConfig(pop_size=16, generations=6, k=3, seed=0)
+        engine = SelectionEngine(stores, nsga, ensemble_k=3)
+        nb = make_topology("full", n)
+        gossip = GossipProtocol(GossipConfig(seed=0), nb)
+
+        def on_add(c, key, t, stores=stores):
+            owner, m = key
+            gid = owner * mpc + m
+            stores[c].add(_entry(gid, owner=owner), preds=mats[(c, gid)],
+                          t=t)
+
+        def on_select_batch(clients, bench, t, engine=engine):
+            return {c: float(r["val_accuracy"])
+                    for c, r in engine.select(clients, t=t).items()}
+
+        acfg = AsyncConfig(n_clients=n, models_per_client=mpc,
+                           select_debounce=0.25, seed=0)
+        trace = simulate_async(acfg, nb,
+                               train_cost=lambda c, m: 1.0 + 0.2 * m,
+                               on_add=on_add,
+                               on_select_batch=on_select_batch,
+                               gossip=gossip)
+        finals = [trace.selections[c][-1][1] for c in range(n)
+                  if trace.selections[c]]
+        accs[capacity] = float(np.mean(finals))
+    assert accs[8] >= accs[n * mpc] - 0.05, accs
