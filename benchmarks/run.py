@@ -243,6 +243,122 @@ def bench_gossip_scale():
             f"capacity={CAP} us_per_client={dt_sel*1e6/n:.0f}")
 
 
+def bench_select_incremental(smoke: bool = False):
+    """Restack vs device-resident incremental select (DESIGN.md §7): the
+    same fleet, the same NSGA-II, the same per-client streams — one
+    engine re-stacks + re-derives acc/S from the raw (N, M, V, C) tensors
+    on every select, the other scatters only the rows dirtied since the
+    last select and launches the GA on cached statistics.
+
+    Each row's primary number is the per-select STATE-UPDATE wall time —
+    the stage the tentpole replaces: host restack + device transfer +
+    full-stats rebuild (restack path) vs dirty-row flush (incremental
+    path). The shared GA stage and the end-to-end select times ride in
+    `derived` (select_us / restack_select_us), since NSGA-II itself is
+    identical work on both paths. Client-count sweep at 10% dirty per
+    select, plus a dirty-fraction sweep at N=64."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import row
+    from repro.core.bench import BenchEntry, PredictionStore, stack_stores
+    from repro.core.engine import SelectionEngine
+    from repro.core.nsga2 import NSGAConfig
+    from repro.core.selection import selection_stats
+
+    # a 128-model fleet bench (64 owners x 2 families) on every client —
+    # the regime the async gossip sim reaches, where the O(N·M²·V·C)
+    # restack stats rebuild is the per-select bottleneck
+    V, C, CAP = 128, 16, 128
+    cfg = NSGAConfig(pop_size=8, generations=2, k=5, seed=0)
+
+    def _pred(rng):
+        p = rng.random((V, C)).astype(np.float32)
+        return p / p.sum(1, keepdims=True)
+
+    def _add(stores, rng, c, gid):
+        stores[c].add(BenchEntry(
+            model_id=gid, owner=gid % len(stores), family="f",
+            predict=lambda x: np.zeros((len(x), C), np.float32)),
+            preds=_pred(rng))
+
+    def touch(stores, rng, frac):
+        """Dirty `frac` of the fleet's MODEL SLOTS: re-materialize that
+        many models at every store — the async gossip pattern, where an
+        updated model's prediction matrix reaches each client's
+        slot-aligned store within the debounce window."""
+        for gid in rng.choice(CAP, max(1, int(frac * CAP)), replace=False):
+            for c in range(len(stores)):
+                _add(stores, rng, c, int(gid))
+
+    def restack_state(stores, v_max):
+        """What the restack path must do before the GA can launch."""
+        preds, labels, _ = stack_stores(stores, v_to=v_max)
+        acc, S = selection_stats(jnp.asarray(preds), jnp.asarray(labels))
+        jax.block_until_ready(S)
+
+    def run_pair(n, frac, reps=3):
+        rng = np.random.default_rng(n)
+        stores = [PredictionStore(c, CAP, np.zeros((V, 2), np.float32),
+                                  rng.integers(0, C, V), C)
+                  for c in range(n)]
+        for c in range(n):
+            for gid in range(CAP):
+                _add(stores, rng, c, gid)
+        eng_inc = SelectionEngine(stores, cfg, ensemble_k=cfg.k)
+        eng_re = SelectionEngine(stores, cfg, ensemble_k=cfg.k,
+                                 device_resident=False)
+        dev = eng_inc.device
+        for _ in range(3):  # compile both paths + the flush variants
+            touch(stores, rng, frac)
+            restack_state(stores, dev.v_max)
+            eng_inc.select()
+            eng_re.select()
+        st_inc, st_re, tot_inc, tot_re = [], [], [], []
+        for _ in range(reps):
+            touch(stores, rng, frac)
+            t0 = time.perf_counter()          # incremental state update
+            dev.flush()
+            jax.block_until_ready(dev.S)
+            t1 = time.perf_counter()          # + GA on cached stats
+            eng_inc.select()
+            t2 = time.perf_counter()          # restack state update
+            restack_state(stores, dev.v_max)
+            t3 = time.perf_counter()          # full restack select
+            eng_re.select()
+            t4 = time.perf_counter()
+            st_inc.append(t1 - t0)
+            tot_inc.append(t2 - t0)
+            st_re.append(t3 - t2)
+            tot_re.append(t4 - t3)
+        agree = all(np.array_equal(eng_inc.results[c]["chromosome"],
+                                   eng_re.results[c]["chromosome"])
+                    for c in range(n))
+        med = lambda xs: float(np.median(xs))  # noqa: E731
+        return (med(st_inc), med(st_re), med(tot_inc), med(tot_re), agree)
+
+    def emit(name, stats, extra=""):
+        st_inc, st_re, tot_inc, tot_re, agree = stats
+        row(name, st_inc * 1e6,
+            f"restack_state_us={st_re*1e6:.0f} "
+            f"state_speedup={st_re/max(st_inc,1e-12):.2f}x "
+            f"select_us={tot_inc*1e6:.0f} "
+            f"restack_select_us={tot_re*1e6:.0f} "
+            f"select_speedup={tot_re/max(tot_inc,1e-12):.2f}x "
+            f"{extra}match={agree}")
+
+    # --smoke (CI) trims the heaviest work: the N=128 row and one timing
+    # rep — the perf gate only consumes the N=64 rows
+    reps = 2 if smoke else 3
+    for n in (16, 64) if smoke else (16, 64, 128):
+        stats = run_pair(n, 0.1, reps=reps)
+        emit(f"select_incremental_N{n}", stats, "dirty_frac=0.10 ")
+        if n == 64:  # the 10% point doubles as the sweep's middle row
+            emit("select_incremental_dirty10", stats, "N=64 ")
+    for frac, tag in ((0.01, "dirty1"), (1.0, "dirty100")):
+        emit(f"select_incremental_{tag}", run_pair(64, frac, reps=reps),
+             f"N=64 dirty_frac={frac} ")
+
+
 def bench_partition_fig4():
     """Fig 4: partition skew vs alpha."""
     from benchmarks.common import row
@@ -285,6 +401,7 @@ def main(smoke: bool = False, json_path: str = None) -> None:
         bench_table3_scalability()
     bench_table4_cost()
     bench_selection_throughput()
+    bench_select_incremental(smoke=smoke)
     bench_gossip_scale()
     bench_nsga2_microbench()
     bench_ensemble_fitness_kernel()

@@ -31,6 +31,11 @@ class BenchEntry:
     family: str
     predict: Callable      # x -> (N, C) probabilities
     n_params: int = 0
+    # optional raw parameters + model config: entries that carry them can
+    # be served through the vmapped multi-model forward
+    # (fl.client.predict_probs_batched) instead of per-entry dispatches
+    params: Optional[object] = None
+    ccfg: Optional[object] = None
 
 
 class PredictionStore:
@@ -64,6 +69,16 @@ class PredictionStore:
         self.last_used = np.zeros((capacity,), np.float64)
         self.slot_gen = np.zeros((capacity,), np.int64)
         self.evictions = 0
+        # dirty-slot event log: slot -> id of its latest change. Device
+        # mirrors (core/device_store.py) drain it with their OWN cursors,
+        # so several consumers can track the same store independently
+        # (nothing is destructively cleared); bounded by capacity.
+        self.dirty_seq: dict = {}
+        self._dirty_clock = 0
+
+    def _mark_dirty(self, slot: int):
+        self._dirty_clock += 1
+        self.dirty_seq[slot] = self._dirty_clock
 
     def _materialize(self, slot: int, entry: BenchEntry,
                      preds: Optional[np.ndarray], t: float):
@@ -73,6 +88,7 @@ class PredictionStore:
         self.mask[slot] = True
         self.entries[slot] = entry
         self.last_used[slot] = t
+        self._mark_dirty(slot)
 
     def add(self, entry: BenchEntry, preds: Optional[np.ndarray] = None,
             t: float = 0.0):
@@ -120,12 +136,34 @@ class PredictionStore:
         """(capacity, N, C) on arbitrary data; with `mask`, only selected
         PRESENT members are evaluated (the 'download only what you need'
         path) and other rows are zero. Always returns an array — an
-        all-False mask yields zeros, never None."""
+        all-False mask yields zeros, never None.
+
+        Members of the same family that carry raw parameters are evaluated
+        with ONE vmapped multi-model forward per family
+        (fl.client.predict_probs_batched); only paramless entries (shipped
+        closures) and singleton family groups fall back to the per-entry
+        loop."""
         out = np.zeros((self.capacity, len(x), self.n_classes), np.float32)
+        groups = {}                       # (family, ccfg) -> [slot, ...]
+        loop_slots = []
         for i, e in enumerate(self.entries):
             if e is None or (mask is not None and not mask[i]):
                 continue
-            out[i] = e.predict(x)
+            if e.params is not None and e.ccfg is not None:
+                groups.setdefault((e.family, e.ccfg), []).append(i)
+            else:
+                loop_slots.append(i)
+        for (fam, ccfg), slots in groups.items():
+            if len(slots) < 2:
+                loop_slots.extend(slots)
+                continue
+            from repro.fl.client import predict_probs_batched
+            probs = predict_probs_batched(
+                fam, ccfg, [self.entries[s].params for s in slots], x)
+            for s, p in zip(slots, probs):
+                out[s] = p
+        for i in loop_slots:
+            out[i] = self.entries[i].predict(x)
         return out
 
 
@@ -176,6 +214,7 @@ class StreamingPredictionStore(PredictionStore):
         self.hits[slot] = 0
         self.last_used[slot] = 0.0
         self.slot_gen[slot] += 1        # invalidates cached chromosomes
+        self._mark_dirty(slot)          # device mirrors zero the row too
         self.evictions += 1
         return slot
 

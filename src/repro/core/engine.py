@@ -2,12 +2,20 @@
 synchronous driver (`run_fedpae`) and the discrete-event asynchronous
 simulator (`run_fedpae_async`).
 
-The engine owns every client's `PredictionStore`, stacks the requested
-clients into an `(N, M, V, C)` batch, and answers with a single
-vmap-compiled NSGA-II run (`selection.select_ensembles`): per-client PRNG
-streams, per-client model-slot masks (models that have not arrived yet
-simply stay masked off), and — with use_kernel=True — one batched Pallas
-`ensemble_fitness` launch per objective evaluation.
+The engine owns every client's `PredictionStore` and, by default, a
+device-resident mirror of the whole fleet (`DeviceStoreBatch`,
+DESIGN.md §7): stacked preds/labels/mask tensors live ON DEVICE next to
+persistent per-client statistics `acc (N, M)` / `S (N, M, M)`. A select
+drains the stores' dirty queues into one donated-buffer scatter that
+touches only the changed rows, gathers the requested client batch with
+`jnp.take` (no host restack), and answers with a single vmap-compiled
+NSGA-II run over the CACHED statistics
+(`selection.select_ensembles_from_stats`): per-client PRNG streams,
+per-client model-slot masks (models that have not arrived yet simply stay
+masked off), and — with use_kernel=True — one batched Pallas
+`ensemble_fitness` launch per objective evaluation. With
+`device_resident=False` the legacy restack path (host `stack_stores` +
+full stats recompute) is kept for benchmarking.
 
 Client batches are padded to the next power of two (by repeating the
 first client) so the jitted program is compiled for O(log N) distinct
@@ -22,31 +30,59 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bench import stack_stores
+from repro.core.device_store import DeviceStoreBatch
+from repro.core.device_store import _pow2 as _pow2_pad
 from repro.core.nsga2 import NSGAConfig, client_keys
-from repro.core.selection import local_only_chromosome, select_ensembles
-
-
-def _pow2_pad(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+from repro.core.selection import (local_only_chromosome, select_ensembles,
+                                  select_ensembles_from_stats)
 
 
 class SelectionEngine:
     """Batched, incremental ensemble selection over a fleet of stores."""
 
     def __init__(self, stores, nsga: NSGAConfig, use_kernel: bool = False,
-                 seed: int = 0, ensemble_k: Optional[int] = None):
+                 seed: int = 0, ensemble_k: Optional[int] = None,
+                 device_resident: bool = True, v_max: Optional[int] = None):
         self.stores = list(stores)
         self.nsga = nsga
         self.use_kernel = use_kernel
         self.seed = seed
         self.ensemble_k = ensemble_k if ensemble_k is not None else max(nsga.k, 1)
         # pin the validation pad width globally: every batch, whatever its
-        # membership, lowers to the same (B, M, V, C) jit signature family
-        self._v_max = max(s.v_pad for s in self.stores)
+        # membership, lowers to the same (B, M, V, C) jit signature family.
+        # `v_max` provisions for clients that JOIN LATER with a wider
+        # validation set — without it, a wider late joiner is rejected
+        # (never silently truncated) by `add_store`/`select`.
+        widest = max(s.v_pad for s in self.stores)
+        if v_max is not None and v_max < widest:
+            raise ValueError(
+                f"engine v_max={v_max} narrower than an attached store's "
+                f"v_pad={widest}")
+        self._v_max = widest if v_max is None else v_max
+        self.device = (DeviceStoreBatch(self.stores, v_max=self._v_max)
+                       if device_resident else None)
         self.results: Dict[int, dict] = {}   # client -> last selection dict
+        self._keys_cache: Dict[tuple, object] = {}  # batch -> PRNG streams
+
+    # ---- membership ---------------------------------------------------
+    def _check_width(self, store):
+        if store.v_pad > self._v_max:
+            raise ValueError(
+                f"store v_pad={store.v_pad} exceeds the engine-wide pad "
+                f"v_max={self._v_max}; construct the engine with "
+                "v_max=<widest validation pad that can ever join> "
+                "(a wider batch would silently truncate this client's "
+                "validation set)")
+
+    def add_store(self, store) -> int:
+        """A client joining mid-run (churn): validate against the pinned
+        engine-wide pad and mirror it into the device batch. Returns the
+        new client index."""
+        self._check_width(store)
+        self.stores.append(store)
+        if self.device is not None:
+            self.device.append_store(store)
+        return len(self.stores) - 1
 
     # ---- selection ----------------------------------------------------
     def min_models(self) -> int:
@@ -68,19 +104,50 @@ class SelectionEngine:
         ready = [c for c in clients if self.stores[c].n_present >= self.min_models()]
         if not ready:
             return {}
+        for c in ready:
+            self._check_width(self.stores[c])
         B = _pow2_pad(len(ready))
         batch = ready + [ready[0]] * (B - len(ready))
-        preds, labels, masks = stack_stores(self.stores, batch, v_to=self._v_max)
-        keys = client_keys(self.seed, np.asarray(batch, np.uint32))
-        out = select_ensembles(jnp.asarray(preds), jnp.asarray(labels),
-                               self.nsga, use_kernel=self.use_kernel,
-                               keys=keys, model_mask=jnp.asarray(masks))
+        keys = self._keys_cache.get(tuple(batch))
+        if keys is None:
+            if len(self._keys_cache) >= 128:   # churn can produce a new
+                self._keys_cache.clear()       # composition per tick —
+            keys = client_keys(self.seed, np.asarray(batch, np.uint32))
+            self._keys_cache[tuple(batch)] = keys  # keep the cache bounded
+        if self.device is not None:
+            # incremental path: scatter only the dirty rows, then gather
+            # the batch and its cached stats on device (DESIGN.md §7);
+            # a whole-fleet batch in natural order is served from the
+            # resident buffers directly (identity gather elided)
+            if self.device.preds.shape[0] != len(self.stores):
+                raise RuntimeError(
+                    "engine.stores grew without the device mirror — "
+                    "admit late joiners through engine.add_store()")
+            self.device.flush()
+            if batch == list(range(len(self.stores))):
+                dev = self.device
+                preds, labels, masks, acc, S = (dev.preds, dev.labels,
+                                                dev.masks, dev.acc, dev.S)
+            else:
+                preds, labels, masks, acc, S = self.device.gather(batch)
+            out = select_ensembles_from_stats(
+                acc, S, preds, labels, self.nsga,
+                use_kernel=self.use_kernel, keys=keys, model_mask=masks)
+        else:
+            # legacy restack path: re-stack + re-derive everything
+            preds, labels, masks = stack_stores(self.stores, batch,
+                                                v_to=self._v_max)
+            out = select_ensembles(jnp.asarray(preds), jnp.asarray(labels),
+                                   self.nsga, use_kernel=self.use_kernel,
+                                   keys=keys, model_mask=jnp.asarray(masks))
+        # ONE device->host transfer per result key (a per-client slicing
+        # loop over device arrays costs hundreds of tiny transfers)
+        host = {k: np.asarray(v) for k, v in out.items()}
         fresh = {}
         for i, c in enumerate(ready):
-            res = {k: np.asarray(v[i]) for k, v in out.items()}
+            res = {k: v[i] for k, v in host.items()}
             res["slot_gen"] = self.stores[c].slot_gen.copy()
-            self.stores[c].note_selection(
-                np.asarray(res["chromosome"]) > 0.5, t)
+            self.stores[c].note_selection(res["chromosome"] > 0.5, t)
             self.results[c] = res
             fresh[c] = res
         return fresh

@@ -54,6 +54,8 @@ class FedPAEConfig:
     use_kernel: bool = False
     store_capacity: Optional[int] = None  # bounded streaming stores (§6);
                                           # None = one slot per global model
+    device_resident: bool = True   # incremental DeviceStoreBatch path (§7);
+                                   # False = legacy host restack per select
     seed: int = 0
 
 
@@ -93,10 +95,12 @@ def train_all_clients(datasets, cfg: FedPAEConfig, n_classes: int):
 def _make_entry(owner: int, fam: str, fam_idx: int, models, ccfg,
                 n_families: int) -> BenchEntry:
     params, _ = models[(owner, fam)]
+    # carrying (params, ccfg) lets the store serve same-family members
+    # through one vmapped multi-model forward (bench.predictions)
     return BenchEntry(
         model_id=owner * n_families + fam_idx, owner=owner, family=fam,
         predict=(lambda x, f=fam, p=params: predict_probs(f, ccfg, p, x)),
-        n_params=n_params(params))
+        n_params=n_params(params), params=params, ccfg=ccfg)
 
 
 def _empty_stores(datasets, cfg: FedPAEConfig, n_classes: int):
@@ -148,7 +152,8 @@ def run_fedpae(datasets, n_classes: int, cfg: FedPAEConfig,
         models, ccfg = train_all_clients(datasets, cfg, n_classes)
     stores = build_stores(datasets, models, ccfg, cfg)
     engine = SelectionEngine(stores, cfg.nsga, use_kernel=cfg.use_kernel,
-                             seed=cfg.seed, ensemble_k=cfg.ensemble_k)
+                             seed=cfg.seed, ensemble_k=cfg.ensemble_k,
+                             device_resident=cfg.device_resident)
     engine.select()  # one vmapped NSGA-II run for ALL clients
 
     accs, local_fracs, chroms, member_accs = [], [], [], []
@@ -189,7 +194,8 @@ def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
     neighbors = make_topology(cfg.topology, n, seed=cfg.seed)
     stores = _empty_stores(datasets, cfg, n_classes)
     engine = SelectionEngine(stores, cfg.nsga, use_kernel=cfg.use_kernel,
-                             seed=cfg.seed, ensemble_k=cfg.ensemble_k)
+                             seed=cfg.seed, ensemble_k=cfg.ensemble_k,
+                             device_resident=cfg.device_resident)
 
     def on_add(c, model_key, t):
         owner, m = model_key

@@ -63,7 +63,11 @@ def ensemble_accuracy(pop, probs, labels):
     pop = pop.astype(jnp.float32)
     valid = labels >= 0
     nv = jnp.maximum(jnp.sum(valid), 1)
-    votes = jnp.einsum("pm,mvc->pvc", pop, probs.astype(jnp.float32))
+    p = probs.astype(jnp.float32)
+    # contract over a 2D (M, V·C) view — the free reshape keeps XLA:CPU
+    # from transpose-copying the prediction tensor before the matmul
+    votes = (pop @ p.reshape(p.shape[0], -1)).reshape(
+        pop.shape[0], p.shape[1], p.shape[2])
     pred = jnp.argmax(votes, axis=-1)  # (P, V)
     hit = (pred == labels[None, :]) & valid[None, :]
     return jnp.sum(hit.astype(jnp.float32), axis=-1) / nv

@@ -71,24 +71,24 @@ def select_ensemble(probs_val, labels_val, nsga: NSGAConfig,
                         probs_val, labels_val, acc)
 
 
-@partial(jax.jit, static_argnames=("nsga", "use_kernel"))
-def select_ensembles(probs_val, labels_val, nsga: NSGAConfig,
-                     use_kernel: bool = False, keys=None, model_mask=None):
-    """Batched multi-client selection — the vmapped engine.
-
-    probs_val: (N, M, V, C) stacked store tensors (one row per client);
-    labels_val: (N, V) with -1 padding; keys: (N, 2) per-client PRNG
-    streams (defaults to fold_in(nsga.seed, client_index));
-    model_mask: (N, M) 0/1 — which store slots hold arrived predictions.
-
-    Returns the same dict as `select_ensemble` with a leading client axis
-    on every value.
-    """
-    N, M = probs_val.shape[0], probs_val.shape[1]
-    if keys is None:
-        keys = client_keys(nsga.seed, jnp.arange(N))
+@jax.jit
+def selection_stats(probs_val, labels_val):
+    """The stats stage: (N, M, V, C) + (N, V) -> (acc (N, M), S (N, M, M)).
+    Everything the GA consumes; the device-resident store batch
+    (core/device_store.py) maintains these incrementally instead of
+    recomputing them per select."""
     acc = jax.vmap(member_accuracy)(probs_val, labels_val)          # (N, M)
     S = jax.vmap(similarity_matrix)(probs_val, labels_val)          # (N, M, M)
+    return acc, S
+
+
+def _ga_stage(acc, S, probs_val, labels_val, nsga: NSGAConfig,
+              use_kernel: bool, keys, model_mask):
+    """The GA stage: NSGA-II over cached (acc, S). `probs_val`/`labels_val`
+    are only touched by the winner-picking overall-accuracy vote."""
+    N, M = acc.shape
+    if keys is None:
+        keys = client_keys(nsga.seed, jnp.arange(N))
 
     if use_kernel:
         from repro.kernels.ensemble_fitness import ops as ef_ops
@@ -104,6 +104,37 @@ def select_ensembles(probs_val, labels_val, nsga: NSGAConfig,
     out = run_nsga2_batched(eval_fn, M, nsga, keys, valid_mask=model_mask)
     return jax.vmap(_pick_winner)(out["pop"], out["objs"], out["ranks"],
                                   probs_val, labels_val, acc)
+
+
+@partial(jax.jit, static_argnames=("nsga", "use_kernel"))
+def select_ensembles(probs_val, labels_val, nsga: NSGAConfig,
+                     use_kernel: bool = False, keys=None, model_mask=None):
+    """Batched multi-client selection — the vmapped engine.
+
+    probs_val: (N, M, V, C) stacked store tensors (one row per client);
+    labels_val: (N, V) with -1 padding; keys: (N, 2) per-client PRNG
+    streams (defaults to fold_in(nsga.seed, client_index));
+    model_mask: (N, M) 0/1 — which store slots hold arrived predictions.
+
+    Returns the same dict as `select_ensemble` with a leading client axis
+    on every value. Stats-stage + GA-stage composed in one jit; callers
+    holding cached stats use `select_ensembles_from_stats` instead.
+    """
+    acc, S = selection_stats(probs_val, labels_val)
+    return _ga_stage(acc, S, probs_val, labels_val, nsga, use_kernel,
+                     keys, model_mask)
+
+
+@partial(jax.jit, static_argnames=("nsga", "use_kernel"))
+def select_ensembles_from_stats(acc, S, probs_val, labels_val,
+                                nsga: NSGAConfig, use_kernel: bool = False,
+                                keys=None, model_mask=None):
+    """GA stage only: consume CACHED per-client statistics (the
+    device-resident incremental path — DESIGN.md §7). `probs_val` is the
+    gathered per-client prediction batch the winner-picking vote needs;
+    the `O(N·M²·V·C)` stats rebuild is skipped entirely."""
+    return _ga_stage(acc, S, probs_val, labels_val, nsga, use_kernel,
+                     keys, model_mask)
 
 
 def local_only_chromosome(is_local, k: int):

@@ -16,7 +16,12 @@ arrivals land in the same window share one select timestamp, and the loop
 drains all same-TICK select events (integer grid indices, robust to FP
 error in the tick times) into a single `on_select_batch` call — which the
 unified engine (core/engine.py) answers with one vmapped NSGA-II run
-covering every ready client.
+covering every ready client. With the device-resident engine (DESIGN.md
+§7) each `recv`/`trained` arrival only enqueues a dirty slot on the host
+store; the batched select drains those queues into one donated-buffer
+device scatter before the GA launches, so steady-state select cost is
+proportional to what changed since the last tick, not to fleet size. The
+trace records each drained batch in `select_batches`.
 
 The exchange layer is pluggable (DESIGN.md §6):
   - `transport` (p2p.GossipTransport): per-edge latency/bandwidth/drop and
@@ -57,6 +62,9 @@ class AsyncTrace:
     events: list                       # (time, kind, client, payload)
     bench_sizes: dict                  # client -> [(t, size)]
     selections: dict                   # client -> [(t, val_acc)]
+    select_batches: list = dataclasses.field(default_factory=list)
+    # ^ (t, n_clients) per drained select tick — how well the debounce
+    #   grid coalesces the fleet into one batched (device-resident) select
     net: Optional[dict] = None         # transport/gossip/churn counters
 
 
@@ -199,6 +207,7 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                     trace.events.append((t2, "select", c2, None))
                     pending_select.discard(c2)
                     ready.append(c2)
+                trace.select_batches.append((t, len(ready)))
                 accs = on_select_batch(
                     ready, {b: sorted(bench[b]) for b in ready}, t) or {}
                 for b in ready:

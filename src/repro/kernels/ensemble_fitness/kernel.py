@@ -31,29 +31,33 @@ from jax.experimental import pallas as pl
 BLOCK_P = 128
 
 
-def _fitness_math(c, acc, S):
-    """c: (BLOCK_P, M); acc: (1, M); S: (M, M) -> (strength, diversity)."""
+def _fitness_math(c, acc, S, diag):
+    """c: (BLOCK_P, M); acc: (1, M); S: (M, M); diag: (1, M) = diag(S),
+    precomputed by the host wrapper -> (strength, diversity). Passing the
+    diagonal in keeps the kernel from materializing an (M, M) iota mask
+    in VMEM every grid step just to re-extract it."""
     k = jnp.sum(c, axis=1)
     kc = jnp.maximum(k, 1.0)
     strength = (c @ acc[0][:, None])[:, 0] / kc  # MXU matvec
     cs = jax.lax.dot(c, S, preferred_element_type=jnp.float32)  # (BLOCK_P, M)
     quad = jnp.sum(cs * c, axis=1)
-    diag = S * jax.lax.broadcasted_iota(jnp.int32, S.shape, 0).__eq__(
-        jax.lax.broadcasted_iota(jnp.int32, S.shape, 1)).astype(S.dtype)
-    self_sim = (c @ jnp.sum(diag, axis=1)[:, None])[:, 0]
+    self_sim = (c @ diag[0][:, None])[:, 0]
     pairs = jnp.maximum(k * (k - 1.0), 1.0)
     return strength, 1.0 - (quad - self_sim) / pairs
 
 
-def _kernel(pop_ref, acc_ref, S_ref, strength_ref, diversity_ref):
-    strength, diversity = _fitness_math(pop_ref[...], acc_ref[...], S_ref[...])
+def _kernel(pop_ref, acc_ref, S_ref, diag_ref, strength_ref, diversity_ref):
+    strength, diversity = _fitness_math(pop_ref[...], acc_ref[...],
+                                        S_ref[...], diag_ref[...])
     strength_ref[...] = strength
     diversity_ref[...] = diversity
 
 
-def _kernel_batched(pop_ref, acc_ref, S_ref, strength_ref, diversity_ref):
+def _kernel_batched(pop_ref, acc_ref, S_ref, diag_ref, strength_ref,
+                    diversity_ref):
     # blocks carry a leading singleton client dim: (1, BLOCK_P, M) etc.
-    strength, diversity = _fitness_math(pop_ref[0], acc_ref[0], S_ref[0])
+    strength, diversity = _fitness_math(pop_ref[0], acc_ref[0], S_ref[0],
+                                        diag_ref[0])
     strength_ref[0] = strength
     diversity_ref[0] = diversity
 
@@ -69,6 +73,7 @@ def ensemble_fitness(pop, acc, S, interpret: bool = True):
     grid = (Pp // BLOCK_P,)
     out_shape = (jax.ShapeDtypeStruct((Pp,), jnp.float32),
                  jax.ShapeDtypeStruct((Pp,), jnp.float32))
+    Sf = S.astype(jnp.float32)
     strength, diversity = pl.pallas_call(
         _kernel,
         grid=grid,
@@ -76,13 +81,14 @@ def ensemble_fitness(pop, acc, S, interpret: bool = True):
             pl.BlockSpec((BLOCK_P, M), lambda i: (i, 0)),
             pl.BlockSpec((1, M), lambda i: (0, 0)),
             pl.BlockSpec((M, M), lambda i: (0, 0)),
+            pl.BlockSpec((1, M), lambda i: (0, 0)),
         ],
         out_specs=(pl.BlockSpec((BLOCK_P,), lambda i: (i,)),
                    pl.BlockSpec((BLOCK_P,), lambda i: (i,))),
         out_shape=out_shape,
         interpret=interpret,
     )(pop.astype(jnp.float32), acc.astype(jnp.float32)[None, :],
-      S.astype(jnp.float32))
+      Sf, jnp.diagonal(Sf)[None, :])
     return strength[:P], diversity[:P]
 
 
@@ -98,6 +104,8 @@ def ensemble_fitness_batched(pop, acc, S, interpret: bool = True):
     grid = (N, Pp // BLOCK_P)
     out_shape = (jax.ShapeDtypeStruct((N, Pp), jnp.float32),
                  jax.ShapeDtypeStruct((N, Pp), jnp.float32))
+    Sf = S.astype(jnp.float32)
+    diag = jnp.diagonal(Sf, axis1=1, axis2=2)  # (N, M), host-side precompute
     strength, diversity = pl.pallas_call(
         _kernel_batched,
         grid=grid,
@@ -105,11 +113,12 @@ def ensemble_fitness_batched(pop, acc, S, interpret: bool = True):
             pl.BlockSpec((1, BLOCK_P, M), lambda n, i: (n, i, 0)),
             pl.BlockSpec((1, 1, M), lambda n, i: (n, 0, 0)),
             pl.BlockSpec((1, M, M), lambda n, i: (n, 0, 0)),
+            pl.BlockSpec((1, 1, M), lambda n, i: (n, 0, 0)),
         ],
         out_specs=(pl.BlockSpec((1, BLOCK_P), lambda n, i: (n, i)),
                    pl.BlockSpec((1, BLOCK_P), lambda n, i: (n, i))),
         out_shape=out_shape,
         interpret=interpret,
     )(pop.astype(jnp.float32), acc.astype(jnp.float32)[:, None, :],
-      S.astype(jnp.float32))
+      Sf, diag[:, None, :])
     return strength[:, :P], diversity[:, :P]

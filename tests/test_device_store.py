@@ -1,0 +1,341 @@
+"""Device-resident incremental selection state (DESIGN.md §7):
+incremental-vs-recompute parity after randomized add/evict/churn
+sequences, identical selections through cached stats, donation safety,
+eviction invalidation, the engine-wide v_max guard, and the batched
+same-family serving path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bench import (BenchEntry, PredictionStore,
+                              StreamingPredictionStore, stack_stores)
+from repro.core.device_store import DeviceStoreBatch
+from repro.core.engine import SelectionEngine
+from repro.core.nsga2 import NSGAConfig, client_keys
+from repro.core.selection import (select_ensembles,
+                                  select_ensembles_from_stats,
+                                  selection_stats)
+
+N, CAP, V, C = 4, 8, 96, 5
+CFG = NSGAConfig(pop_size=16, generations=6, k=3, seed=3)
+
+
+def _entry(mid, owner=None, predict=None):
+    return BenchEntry(model_id=mid, owner=mid if owner is None else owner,
+                      family="f",
+                      predict=predict or (lambda x: np.full(
+                          (len(x), C), 1.0 / C, np.float32)))
+
+
+def _rand_preds(rng):
+    p = rng.random((V, C)).astype(np.float32)
+    return p / p.sum(1, keepdims=True)
+
+
+def _fresh_stores(seed=0, streaming=True, n=N):
+    rng = np.random.default_rng(seed)
+    cls = StreamingPredictionStore if streaming else PredictionStore
+    return [cls(c, CAP, np.zeros((V, 2), np.float32),
+                rng.integers(0, C, V), C) for c in range(n)], rng
+
+
+def _full_rebuild_stats(stores, v_max):
+    preds, labels, masks = stack_stores(stores, v_to=v_max)
+    acc, S = selection_stats(jnp.asarray(preds), jnp.asarray(labels))
+    return preds, labels, masks, np.asarray(acc), np.asarray(S)
+
+
+def _churn(stores, rng, dev=None, n_ops=60, flush_every=7):
+    """Randomized adds (with eviction pressure: 3x more global ids than
+    physical slots), interleaved with device flushes."""
+    for op in range(n_ops):
+        c = int(rng.integers(0, len(stores)))
+        gid = int(rng.integers(0, 3 * CAP))
+        stores[c].add(_entry(gid, owner=gid % len(stores)),
+                      preds=_rand_preds(rng), t=float(op))
+        if dev is not None and op % flush_every == 0:
+            dev.flush()
+
+
+# ------------------------------------------------- incremental parity
+
+def test_incremental_stats_match_full_rebuild():
+    """After a randomized add/evict/churn sequence with interleaved
+    flushes, the cached device acc/S equal a from-scratch stack_stores +
+    full-stats rebuild to fp32 tolerance."""
+    stores, rng = _fresh_stores(seed=1)
+    dev = DeviceStoreBatch(stores)
+    _churn(stores, rng, dev=dev)
+    dev.flush()
+    assert sum(s.evictions for s in stores) > 0  # churn actually evicted
+    preds, labels, masks, acc_full, S_full = _full_rebuild_stats(
+        stores, dev.v_max)
+    np.testing.assert_array_equal(np.asarray(dev.preds), preds)
+    np.testing.assert_array_equal(np.asarray(dev.masks), masks)
+    np.testing.assert_allclose(np.asarray(dev.acc), acc_full, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dev.S), S_full, atol=1e-5)
+
+
+def test_incremental_selection_identical_to_recompute():
+    """Selections through the cached stats equal (i) a fresh
+    DeviceStoreBatch flushed once from the final store state and (ii) the
+    full select_ensembles recompute — chromosome for chromosome."""
+    stores, rng = _fresh_stores(seed=2)
+    dev = DeviceStoreBatch(stores)
+    _churn(stores, rng, dev=dev)
+    dev.flush()
+    keys = client_keys(CFG.seed, np.arange(N))
+    preds_i, labels_i, masks_i, acc_i, S_i = dev.gather(np.arange(N))
+    inc = select_ensembles_from_stats(acc_i, S_i, preds_i, labels_i, CFG,
+                                      keys=keys, model_mask=masks_i)
+
+    fresh = DeviceStoreBatch(stores)  # from-scratch: every slot re-flushed
+    fresh.flush()
+    np.testing.assert_array_equal(np.asarray(dev.acc), np.asarray(fresh.acc))
+    np.testing.assert_array_equal(np.asarray(dev.S), np.asarray(fresh.S))
+
+    preds, labels, masks = stack_stores(stores, v_to=dev.v_max)
+    full = select_ensembles(jnp.asarray(preds), jnp.asarray(labels), CFG,
+                            keys=keys, model_mask=jnp.asarray(masks))
+    np.testing.assert_array_equal(np.asarray(inc["chromosome"]),
+                                  np.asarray(full["chromosome"]))
+    np.testing.assert_allclose(np.asarray(inc["val_accuracy"]),
+                               np.asarray(full["val_accuracy"]), atol=1e-6)
+
+
+def test_engine_incremental_matches_restack_engine():
+    """The engine's device-resident path and the legacy restack path pick
+    identical ensembles for the same store state and seeds."""
+    stores_a, rng_a = _fresh_stores(seed=4)
+    stores_b, rng_b = _fresh_stores(seed=4)
+    eng_inc = SelectionEngine(stores_a, CFG, ensemble_k=CFG.k)
+    eng_re = SelectionEngine(stores_b, CFG, ensemble_k=CFG.k,
+                             device_resident=False)
+    assert eng_inc.device is not None and eng_re.device is None
+    _churn(stores_a, rng_a)
+    _churn(stores_b, rng_b)
+    # selects along the way stamp contribution stats (eviction input), so
+    # they must run on BOTH engines to keep the fleets comparable — and
+    # the intermediate answers must already agree
+    for _ in range(2):
+        ra = eng_inc.select(t=1.0)
+        rb = eng_re.select(t=1.0)
+        for c in ra:
+            np.testing.assert_array_equal(ra[c]["chromosome"],
+                                          rb[c]["chromosome"])
+        _churn(stores_a, rng_a, n_ops=10)
+        _churn(stores_b, rng_b, n_ops=10)
+    eng_inc.select(t=2.0)
+    eng_re.select(t=2.0)
+    for c in range(N):
+        np.testing.assert_array_equal(eng_inc.results[c]["chromosome"],
+                                      eng_re.results[c]["chromosome"])
+        np.testing.assert_allclose(eng_inc.results[c]["member_acc"],
+                                   eng_re.results[c]["member_acc"],
+                                   atol=1e-5)
+
+
+# ------------------------------------------------- eviction coherence
+
+def test_eviction_zeroes_device_row_and_stats():
+    """slot_gen bumps (evictions) must zero the device row and drop the
+    cached similarity row/column on the next flush."""
+    stores, rng = _fresh_stores(seed=5, n=1)
+    s = stores[0]
+    for gid in range(CAP):
+        s.add(_entry(gid, owner=1), preds=_rand_preds(rng), t=float(gid))
+    dev = DeviceStoreBatch(stores)
+    dev.flush()
+    assert float(jnp.abs(dev.S).sum()) > 0
+    gen_before = s.slot_gen.copy()
+    s.add(_entry(CAP + 1, owner=1), preds=_rand_preds(rng), t=99.0)  # evicts
+    evicted = int(np.flatnonzero(s.slot_gen != gen_before)[0])
+    victim_gid = [g for g, sl in s.slot_of.items() if sl == evicted]
+    assert victim_gid == [CAP + 1]  # slot now remapped to the newcomer
+    # evict WITHOUT refilling: drop the newcomer again via direct evict
+    slot2 = s._evict_one()
+    dev.flush()
+    np.testing.assert_array_equal(np.asarray(dev.preds[0, slot2]), 0.0)
+    assert float(dev.masks[0, slot2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(dev.S[0, slot2, :]), 0.0)
+    np.testing.assert_array_equal(np.asarray(dev.S[0, :, slot2]), 0.0)
+
+
+# ------------------------------------------------- flush mechanics
+
+def test_flush_noop_and_dirty_counting():
+    stores, rng = _fresh_stores(seed=6)
+    dev = DeviceStoreBatch(stores)
+    stores[0].add(_entry(0), preds=_rand_preds(rng))
+    stores[2].add(_entry(5), preds=_rand_preds(rng))
+    assert dev.flush() == 2          # exactly the two dirty slots
+    assert dev.flush() == 0          # clean: no-op, no jit launch
+    n = dev.n_flushes
+    dev.flush()
+    assert dev.n_flushes == n        # no-op did not count as a flush
+    stores[1].add(_entry(3), preds=_rand_preds(rng))
+    assert dev.flush() == 1          # only the changed row is scattered
+
+
+def test_skewed_dirty_widths_bucket_into_separate_flushes():
+    """One bursty client (churn join: every slot dirty) must not inflate
+    the padded width of every other client's group — groups bucket by
+    their own pow2 width, and parity still holds."""
+    stores, rng = _fresh_stores(seed=11)
+    dev = DeviceStoreBatch(stores)
+    for c in range(N):                       # light dirt everywhere
+        stores[c].add(_entry(0), preds=_rand_preds(rng))
+    for gid in range(CAP):                   # burst on client 2
+        stores[2].add(_entry(gid), preds=_rand_preds(rng))
+    n0 = dev.n_flushes
+    assert dev.flush() == (N - 1) + CAP
+    assert dev.n_flushes - n0 == 2           # width-1 and width-CAP buckets
+    _, _, masks_f, acc_f, S_f = _full_rebuild_stats(stores, dev.v_max)
+    np.testing.assert_array_equal(np.asarray(dev.masks), masks_f)
+    np.testing.assert_allclose(np.asarray(dev.acc), acc_f, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dev.S), S_f, atol=1e-5)
+
+
+def test_two_device_batches_track_one_fleet_independently():
+    """The dirty log is multi-consumer: a second DeviceStoreBatch over
+    the same stores must see every event the first one drained."""
+    stores, rng = _fresh_stores(seed=12)
+    a = DeviceStoreBatch(stores)
+    b = DeviceStoreBatch(stores)
+    stores[1].add(_entry(3), preds=_rand_preds(rng))
+    assert a.flush() == 1                    # A drains first...
+    assert b.flush() == 1                    # ...B still sees the event
+    np.testing.assert_array_equal(np.asarray(a.masks), np.asarray(b.masks))
+    np.testing.assert_array_equal(np.asarray(a.acc), np.asarray(b.acc))
+    np.testing.assert_array_equal(np.asarray(a.S), np.asarray(b.S))
+
+
+def test_donation_safety_no_use_after_donate():
+    """The flush donates its buffers: the batch must adopt the returned
+    arrays (never touch the donated handles again) and keep answering
+    correctly across repeated flush/gather cycles."""
+    stores, rng = _fresh_stores(seed=7)
+    _churn(stores, rng, n_ops=20)
+    dev = DeviceStoreBatch(stores)
+    for round_ in range(3):
+        old = (dev.preds, dev.masks, dev.acc, dev.S)
+        _churn(stores, rng, n_ops=5)
+        dev.flush()
+        assert all(new is not o for new, o in
+                   zip((dev.preds, dev.masks, dev.acc, dev.S), old))
+        # reads go through the fresh handles only — and stay correct
+        _, _, masks_g, acc_g, _ = dev.gather(np.arange(N))
+        _, _, masks_f, acc_f, _ = _full_rebuild_stats(stores, dev.v_max)
+        np.testing.assert_array_equal(np.asarray(masks_g), masks_f)
+        np.testing.assert_allclose(np.asarray(acc_g), acc_f, atol=1e-5)
+
+
+def test_flush_is_donated():
+    """The jitted flush really marks its five mutable buffers as donated
+    (input-output aliased — the in-place device update the tentpole is
+    named for); labels, nv, and the dirty rows are not."""
+    from repro.core.device_store import _flush
+    n, m, v, c, k, r = 2, 4, 8, 3, 1, 2
+    args = (jnp.zeros((n, m, v, c)), jnp.zeros((n, m, v, c)),
+            jnp.zeros((n, m)), jnp.zeros((n, m)), jnp.zeros((n, m, m)),
+            jnp.zeros((n, v), jnp.int32), jnp.ones((n,)),
+            jnp.zeros((k * r, v, c)), jnp.zeros((k * r,)),
+            jnp.zeros((k,), jnp.int32), jnp.zeros((k, r), jnp.int32))
+    main = [l for l in _flush.lower(*args).as_text().splitlines()
+            if "@main" in l][0]
+    for i in range(5):
+        assert f"%arg{i}: " in main and "aliasing_output" in \
+            main.split(f"%arg{i}: ")[1].split("%arg")[0]
+    assert "aliasing_output" not in main.split("%arg5: ")[1]
+
+
+# ------------------------------------------------- v_max guard (churn join)
+
+def test_late_wider_client_is_rejected_not_truncated():
+    stores, rng = _fresh_stores(seed=8)
+    engine = SelectionEngine(stores, CFG, ensemble_k=CFG.k)
+    wide = PredictionStore(N, CAP, np.zeros((V, 2), np.float32),
+                           rng.integers(0, C, 4 * V), C)
+    assert wide.v_pad > engine._v_max
+    with pytest.raises(ValueError, match="v_pad"):
+        engine.add_store(wide)
+    # the restack path refuses too (no silent truncation)
+    eng_re = SelectionEngine(stores, CFG, ensemble_k=CFG.k,
+                             device_resident=False)
+    eng_re.stores.append(wide)
+    for gid in range(CFG.k):
+        wide.add(_entry(gid, owner=N), preds=np.full(
+            (4 * V, C), 1.0 / C, np.float32))
+    with pytest.raises(ValueError, match="v_pad"):
+        eng_re.select()
+
+
+def test_provisioned_v_max_admits_wider_late_joiner():
+    stores, rng = _fresh_stores(seed=9)
+    with pytest.raises(ValueError, match="narrower"):
+        SelectionEngine(stores, CFG, v_max=32)   # below the widest store
+    engine = SelectionEngine(stores, CFG, ensemble_k=CFG.k,
+                             v_max=4 * V + ((-4 * V) % 128))
+    _churn(stores, rng, n_ops=30)
+    wide = PredictionStore(N, CAP, np.zeros((4 * V, 2), np.float32),
+                           rng.integers(0, C, 4 * V), C)
+    idx = engine.add_store(wide)
+    assert idx == N and engine.device.preds.shape[0] == N + 1
+    for gid in range(CAP):
+        wide.add(_entry(gid, owner=N), preds=np.asarray(
+            np.random.default_rng(0).random((4 * V, C)), np.float32))
+    res = engine.select()
+    assert idx in res                            # the late joiner selects
+    assert res[idx]["chromosome"].sum() == CFG.k
+    # its stats match a from-scratch rebuild over the grown fleet
+    _, _, _, acc_f, S_f = _full_rebuild_stats(engine.stores, engine._v_max)
+    np.testing.assert_allclose(np.asarray(engine.device.acc), acc_f,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(engine.device.S), S_f, atol=1e-5)
+
+
+# ------------------------------------------------- batched serving path
+
+def test_predictions_batched_same_family():
+    """Same-family members carrying raw params are served through ONE
+    vmapped multi-model forward; per-entry closures are never called."""
+    import jax
+
+    from repro.fl.client import predict_probs
+    from repro.models.cnn import CNNConfig, init_model
+
+    ccfg = CNNConfig(n_classes=C, width=4, in_channels=2)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = [init_model("cnn4", k, ccfg) for k in keys]
+    x_val = np.zeros((V, 8, 8, 2), np.float32)
+    store = PredictionStore(0, 4, x_val,
+                            np.zeros(V, np.int64), C)
+    calls = []
+    for i, p in enumerate(params):
+        e = BenchEntry(model_id=i, owner=0, family="cnn4",
+                       predict=lambda x, p=p: calls.append(1) or
+                       predict_probs("cnn4", ccfg, p, x),
+                       params=p, ccfg=ccfg)
+        store.add(e, preds=np.full((V, C), 1.0 / C, np.float32))
+    x = np.random.default_rng(1).random((7, 8, 8, 2)).astype(np.float32)
+    mask = np.array([True, True, True, False])
+    out = store.predictions(x, mask=mask)
+    assert calls == []               # batched path: no per-entry dispatch
+    for i, p in enumerate(params):
+        np.testing.assert_allclose(out[i], predict_probs("cnn4", ccfg, p, x),
+                                    atol=1e-5)
+    assert (out[3] == 0).all()
+
+
+def test_predictions_falls_back_for_paramless_entries():
+    x_val = np.zeros((V, 2), np.float32)
+    store = PredictionStore(0, 3, x_val, np.zeros(V, np.int64), C)
+    calls = []
+    for i in range(2):
+        store.add(_entry(i, owner=0,
+                         predict=lambda x, i=i: calls.append(i) or np.full(
+                             (len(x), C), 1.0 / C, np.float32)),
+                  preds=np.full((V, C), 1.0 / C, np.float32))
+    out = store.predictions(np.zeros((5, 2), np.float32))
+    assert sorted(calls) == [0, 1]   # shipped closures: loop path
+    assert out.shape == (3, 5, C)
