@@ -243,6 +243,53 @@ def bench_gossip_scale():
             f"capacity={CAP} us_per_client={dt_sel*1e6/n:.0f}")
 
 
+def bench_lossy_repair():
+    """Anti-entropy repair (DESIGN.md §8) at 16/64 clients on a lossy
+    ring: dissemination coverage with vs without the digest/re-send
+    loop, repair counters, and the byte overhead repair costs — the
+    simulator wall time is the row's primary number."""
+    from benchmarks.common import row
+    from repro.fl.scheduler import AsyncConfig, simulate_async
+    from repro.fl.topology import make_topology
+    from repro.p2p import (AntiEntropyRepair, GossipConfig, GossipProtocol,
+                           GossipTransport, RepairConfig, TransportConfig,
+                           prediction_matrix_bytes)
+
+    V, C, MPC, DROP = 128, 8, 2, 0.1
+    for n in (16, 64):
+        covs, nets, dt = {}, {}, {}
+        for with_repair in (False, True):
+            nb = make_topology("ring", n, seed=0)
+            gossip = GossipProtocol(GossipConfig(mode="push", seed=0), nb)
+            transport = GossipTransport(
+                TransportConfig(base_latency=0.05, drop_prob=DROP,
+                                bandwidth=50e6, inbox_capacity=64, seed=0),
+                n, lambda s, d, k: prediction_matrix_bytes(V, C))
+            repair = AntiEntropyRepair(
+                RepairConfig(max_rounds=60, max_attempts=8, seed=0),
+                gossip) if with_repair else None
+            acfg = AsyncConfig(n_clients=n, models_per_client=MPC, seed=0)
+            t0 = time.perf_counter()
+            trace = simulate_async(acfg, nb,
+                                   train_cost=lambda c, m: 1.0 + 0.2 * m,
+                                   transport=transport, gossip=gossip,
+                                   repair=repair)
+            dt[with_repair] = time.perf_counter() - t0
+            finals = [s[-1][1] if s else 0
+                      for s in trace.bench_sizes.values()]
+            covs[with_repair] = sum(finals) / (n * n * MPC)
+            nets[with_repair] = trace.net
+        rs = nets[True]["repair"]
+        byte_x = (nets[True]["transport"]["bytes_sent"]
+                  / max(nets[False]["transport"]["bytes_sent"], 1))
+        row(f"lossy_repair_N{n}", dt[True] * 1e6,
+            f"coverage={covs[True]:.4f} norepair_coverage="
+            f"{covs[False]:.4f} digests={rs['n_digests_sent']} "
+            f"gaps={rs['n_gaps_found']} resends={rs['n_resends']} "
+            f"byte_overhead={byte_x:.2f}x "
+            f"norepair_us={dt[False]*1e6:.0f}")
+
+
 def bench_select_incremental(smoke: bool = False):
     """Restack vs device-resident incremental select (DESIGN.md §7): the
     same fleet, the same NSGA-II, the same per-client streams — one
@@ -403,6 +450,7 @@ def main(smoke: bool = False, json_path: str = None) -> None:
     bench_selection_throughput()
     bench_select_incremental(smoke=smoke)
     bench_gossip_scale()
+    bench_lossy_repair()
     bench_nsga2_microbench()
     bench_ensemble_fitness_kernel()
     bench_partition_fig4()

@@ -138,7 +138,8 @@ def main():
         print(f"\n[{name} cap={cap}] final mean val-acc "
               f"{runs[name]['acc']:.3f} over {len(finals)} selecting "
               f"clients | bytes-on-wire {transport.stats.bytes_sent/1e6:.1f}"
-              f" MB | evictions {evictions} | "
+              f" MB (+{transport.stats.bytes_rejected/1e6:.1f} MB "
+              f"inbox-rejected, not on wire) | evictions {evictions} | "
               f"dropped link/inbox/offline "
               f"{transport.stats.n_dropped_link}/"
               f"{transport.stats.n_dropped_inbox}/"

@@ -1,0 +1,140 @@
+"""Convergence under message loss: gossip with vs without anti-entropy.
+
+FedPAE's decentralized claim (§III-A) needs every client's prediction
+store to EVENTUALLY hold every peer's model — but an epidemic push over
+lossy links stalls short: once a forward is dropped, version-vector
+dedupe guarantees nobody ever re-sends it (fl/scheduler.py only pushes
+on trained/recv events). This example measures that gap and the repair
+subsystem (p2p.repair, DESIGN.md §8) that closes it:
+
+  - ring topology (the hardest overlay: exactly two paths per model),
+    `drop_prob` in {0%, 10%, 30%}, push gossip, with and without
+    periodic digest exchange + bounded backoff re-sends;
+  - reports COVERAGE (fraction of (client, model) pairs held at the
+    end), time-to-full-dissemination, and the byte overhead repair adds
+    (digest bytes + re-sent model bytes vs the no-repair run);
+  - asserts the headline claim: at 10% drops repair reaches 100%
+    dissemination while the no-repair baseline does not, and the trace
+    is bit-identical across two runs with the same seed;
+  - `--json PATH` dumps `benchmarks/check_select.py`-style rows for the
+    CI gate (`benchmarks/check_repair.py`).
+
+    PYTHONPATH=src python examples/lossy_links.py [--smoke] [--json PATH]
+"""
+import argparse
+import json
+
+import numpy as np
+
+from repro.fl.scheduler import AsyncConfig, simulate_async
+from repro.fl.topology import make_topology
+from repro.p2p import (AntiEntropyRepair, GossipConfig, GossipProtocol,
+                       GossipTransport, RepairConfig, TransportConfig,
+                       prediction_matrix_bytes)
+
+V, C = 128, 8
+
+
+def run_once(n, mpc, drop, with_repair, seed=0):
+    """One dissemination run; returns (trace, transport, repair, stats)
+    where stats has coverage / t_full / bytes split by message class."""
+    nb = make_topology("ring", n, seed=seed)
+    gossip = GossipProtocol(GossipConfig(mode="push", seed=seed), nb)
+    transport = GossipTransport(
+        TransportConfig(base_latency=0.05, jitter=1.0, bandwidth=50e6,
+                        drop_prob=drop, inbox_capacity=64, seed=seed),
+        n, lambda s, d, k: prediction_matrix_bytes(V, C))
+    repair = None
+    if with_repair:
+        repair = AntiEntropyRepair(
+            RepairConfig(interval=1.0, start=1.0, max_rounds=60,
+                         quiesce_after=2, max_attempts=8,
+                         max_resends_per_digest=8, seed=seed), gossip)
+    acfg = AsyncConfig(n_clients=n, models_per_client=mpc, seed=seed)
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
+                           transport=transport, gossip=gossip,
+                           repair=repair)
+    total = n * mpc
+    finals = [series[-1][1] if series else 0
+              for series in trace.bench_sizes.values()]
+    coverage = sum(finals) / (n * total)
+    t_full = max(series[-1][0] for series in trace.bench_sizes.values()) \
+        if coverage == 1.0 else float("nan")
+    stats = dict(coverage=coverage, t_full=t_full,
+                 bytes_sent=transport.stats.bytes_sent,
+                 bytes_rejected=transport.stats.bytes_rejected,
+                 dropped=transport.stats.n_dropped_link,
+                 repair=repair.stats.as_dict() if repair else None)
+    return trace, transport, repair, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: 8 clients instead of 24")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump rows for benchmarks/check_repair.py")
+    args = ap.parse_args()
+    n, mpc = (8, 2) if args.smoke else (24, 2)
+    print(f"world: {n} clients x {mpc} models on a ring, push gossip, "
+          f"drop_prob sweep, repair = digest anti-entropy + bounded "
+          f"backoff re-sends\n")
+    print(f"{'drop':>5} {'repair':>7} {'coverage':>9} {'t_full':>8} "
+          f"{'wire_MB':>8} {'digests':>8} {'resends':>8}")
+
+    rows, results = [], {}
+    for drop in (0.0, 0.1, 0.3):
+        for with_repair in (False, True):
+            trace, transport, repair, st = run_once(n, mpc, drop,
+                                                    with_repair)
+            results[(drop, with_repair)] = st
+            rs = st["repair"] or {}
+            tag = "on" if with_repair else "off"
+            print(f"{drop:5.0%} {tag:>7} {st['coverage']:9.3f} "
+                  f"{st['t_full']:8.2f} {st['bytes_sent']/1e6:8.2f} "
+                  f"{rs.get('n_digests_sent', 0):8d} "
+                  f"{rs.get('n_resends', 0):8d}")
+            rows.append(dict(
+                name=f"repair_drop{int(drop * 100)}_{tag}",
+                us_per_call=0.0 if np.isnan(st["t_full"])
+                else st["t_full"] * 1e6,
+                derived=f"coverage={st['coverage']:.4f} "
+                        f"wire_MB={st['bytes_sent']/1e6:.2f} "
+                        f"dropped={st['dropped']} "
+                        f"digests={rs.get('n_digests_sent', 0)} "
+                        f"gaps={rs.get('n_gaps_found', 0)} "
+                        f"resends={rs.get('n_resends', 0)} "
+                        f"digest_MB={rs.get('bytes_digests', 0)/1e6:.3f}"))
+
+    # -- headline claim: repair closes the 10%-drop dissemination gap ---
+    cov_off = results[(0.1, False)]["coverage"]
+    cov_on = results[(0.1, True)]["coverage"]
+    print(f"\nat 10% drops: no-repair coverage {cov_off:.3f} -> "
+          f"repair coverage {cov_on:.3f}")
+    assert cov_on == 1.0, f"repair failed to reach full dissemination " \
+                          f"({cov_on:.3f})"
+    assert cov_off < 1.0, "no-repair baseline unexpectedly converged — " \
+                          "the comparison is vacuous at this seed"
+    overhead = (results[(0.1, True)]["bytes_sent"]
+                / max(results[(0.1, False)]["bytes_sent"], 1))
+    print(f"repair byte overhead at 10% drops: {overhead:.2f}x the "
+          f"no-repair wire bytes (digests + re-sends)")
+
+    # -- determinism: retry streams are order-independent ---------------
+    t1, tr1, _, _ = run_once(n, mpc, 0.1, True)
+    t2, tr2, _, _ = run_once(n, mpc, 0.1, True)
+    assert t1.events == t2.events and t1.net == t2.net \
+        and tr1.log == tr2.log, "trace not bit-identical across runs"
+    print("determinism: repair trace is bit-identical across two runs "
+          "with the same seed")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.json}")
+    print("\nOK: anti-entropy repair turns lossy-link gossip from "
+          "best-effort into eventually-complete dissemination.")
+
+
+if __name__ == "__main__":
+    main()

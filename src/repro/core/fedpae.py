@@ -177,12 +177,16 @@ def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
                      acfg: Optional[AsyncConfig] = None,
                      models=None, ccfg=None,
                      train_cost: Optional[Callable] = None,
-                     transport=None, gossip=None, churn=None) -> AsyncFedPAEResult:
+                     transport=None, gossip=None, churn=None,
+                     repair=None) -> AsyncFedPAEResult:
     """The unified async driver: virtual-clock simulation where arrivals
     incrementally materialize the stores and debounced select events run
     REAL batched re-selection through the shared engine. The optional
     `transport`/`gossip`/`churn` p2p layers (repro.p2p) make the exchange
-    lossy, multi-hop, and churn-aware (DESIGN.md §6)."""
+    lossy, multi-hop, and churn-aware (DESIGN.md §6); `repair`
+    (p2p.AntiEntropyRepair, needs transport + gossip) adds the
+    anti-entropy digest/re-send loop that makes dissemination under loss
+    eventually complete (DESIGN.md §8)."""
     n = len(datasets)
     if models is None:
         models, ccfg = train_all_clients(datasets, cfg, n_classes)
@@ -210,7 +214,7 @@ def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
         acfg, neighbors,
         train_cost=train_cost or (lambda c, m: 1.0 + 0.3 * m),
         on_add=on_add, on_select_batch=on_select_batch,
-        transport=transport, gossip=gossip, churn=churn)
+        transport=transport, gossip=gossip, churn=churn, repair=repair)
 
     accs = [accuracy(engine.serve(c, d.x_te)[0], d.y_te)
             for c, d in enumerate(datasets)]

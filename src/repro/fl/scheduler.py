@@ -23,17 +23,26 @@ device scatter before the GA launches, so steady-state select cost is
 proportional to what changed since the last tick, not to fleet size. The
 trace records each drained batch in `select_batches`.
 
-The exchange layer is pluggable (DESIGN.md §6):
+The exchange layer is pluggable (DESIGN.md §6, §8):
   - `transport` (p2p.GossipTransport): per-edge latency/bandwidth/drop and
     bounded inboxes decide each recv's delay — or loss — instead of the
     flat `link_latency`;
   - `gossip` (p2p.GossipProtocol): epidemic relay with version-vector
-    dedupe instead of single-hop broadcast;
+    dedupe instead of single-hop broadcast. `gossip.note_sent` fires only
+    AFTER `transport.send` accepted the message (a failed send leaves the
+    peer re-targetable), and a receiver-offline arrival is reported back
+    via `gossip.note_lost` so the sender's belief is invalidated;
   - `churn` (p2p.ChurnSchedule): offline clients neither send nor
-    receive; departed clients' models stop propagating.
-All latency draws come from per-(src, dst, model) fold_in-style streams
-(`p2p.transport.edge_rng`), never from a shared rng consumed in event
-order, so a trace is a pure function of the seed.
+    receive; departed clients' models stop propagating;
+  - `repair` (p2p.AntiEntropyRepair, requires transport + gossip):
+    periodic per-edge digest exchange ("digest_send"/"digest" events,
+    priced through the transport) detects missing (key, version) pairs
+    and schedules bounded "resend" events with deterministic per-attempt
+    backoff — the loop that makes lossy-link dissemination eventually
+    complete instead of best-effort.
+All latency draws come from per-(src, dst, model, attempt, version)
+fold_in-style streams (`p2p.transport.edge_rng`), never from a shared rng
+consumed in event order, so a trace is a pure function of the seed.
 """
 from __future__ import annotations
 
@@ -44,7 +53,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.p2p.transport import edge_rng
+from repro.p2p.transport import DIGEST_OWNER, edge_rng
 
 
 @dataclasses.dataclass
@@ -79,7 +88,8 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                    on_select: Optional[Callable] = None,
                    on_add: Optional[Callable] = None,
                    on_select_batch: Optional[Callable] = None,
-                   transport=None, gossip=None, churn=None) -> AsyncTrace:
+                   transport=None, gossip=None, churn=None,
+                   repair=None) -> AsyncTrace:
     """train_cost(client, local_idx) -> virtual duration of that training.
     on_add(client, model_key, t) — a model (own or peer) entered the
       client's bench; the engine uses this to incrementally materialize
@@ -91,11 +101,16 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     transport/gossip/churn — optional p2p layers (see module docstring);
       with none given the legacy single-hop, lossless exchange runs, but
       with per-edge deterministic latency streams.
+    repair — optional p2p.AntiEntropyRepair (requires transport AND
+      gossip): drives the periodic digest / bounded-resend event kinds.
 
     Returns the full event trace — tests assert gossip convergence and
     monotone bench growth on it. `trace.net` carries the p2p counters
-    (bytes on wire, drops, dedups, offline losses) when layers are given.
+    (bytes on wire, drops, dedups, offline losses, repair activity) when
+    layers are given.
     """
+    if repair is not None and (transport is None or gossip is None):
+        raise ValueError("repair requires both transport and gossip layers")
     rng = np.random.default_rng(cfg.seed)
     speeds = np.exp(rng.normal(0, cfg.speed_lognorm_sigma, cfg.n_clients))
     q = []  # (time, seq, kind, client, payload, src)
@@ -126,24 +141,33 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
         if acc is not None:
             trace.selections[c].append((t, float(acc)))
 
-    def send_model(src, dst, key, t):
+    def send_model(src, dst, key, t, version=None):
         """One message through the exchange layer: churn gates the sender,
-        the transport (or the legacy per-edge stream) prices the link."""
+        the transport (or the legacy per-edge stream) prices the link.
+        `gossip.note_sent` fires only once the transport ACCEPTED the
+        message — a dropped or inbox-rejected send must leave dst
+        re-targetable (the optimistic-ack fix). The message carries the
+        sender's CURRENT version of the key (default) so it survives
+        delivery into `gossip.on_receive`; repair re-sends pin the
+        version their retry streams were folded with."""
         nonlocal n_lost_offline
         if churn is not None and not churn.is_online(src, t):
             n_lost_offline += 1
             return
-        if gossip is not None:
-            gossip.note_sent(src, dst, key)
+        if version is None:
+            version = gossip.have[src].get(key, 0) if gossip is not None \
+                else 0
         if transport is not None:
-            arrival = transport.send(src, dst, key, t)
+            arrival = transport.send(src, dst, key, t, version=version)
             if arrival is None:
                 return
         else:
             lat = cfg.link_latency * (1 + edge_rng(cfg.seed, src, dst,
                                                    key).random())
             arrival = t + lat
-        push(arrival, "recv", dst, key, src)
+        if gossip is not None:
+            gossip.note_sent(src, dst, key)
+        push(arrival, "recv", dst, (key, version), src)
 
     def admit(c, key, t):
         """A new model enters client c's bench."""
@@ -151,17 +175,30 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
         trace.bench_sizes[c].append((t, len(bench[c])))
         if on_add is not None:
             on_add(c, key, t)
+        if repair is not None:  # new content re-arms quiesced digest edges
+            for dst in repair.wake(c, t):
+                push(t + repair.cfg.interval, "digest_send", c, dst)
 
     for c in range(cfg.n_clients):
         t_done = float(churn.join[c]) if churn is not None else 0.0
         for m in range(cfg.models_per_client):
             t_done += speeds[c] * train_cost(c, m)
             push(t_done, "trained", c, (c, m))
+    if repair is not None:
+        for a, b in repair.edges:
+            push(repair.cfg.start, "digest_send", a, b)
 
     while q:
         t, _, kind, c, payload, src = heapq.heappop(q)
-        trace.events.append((t, kind, c,
-                             None if kind == "select" else payload))
+        if kind == "select":
+            tpay = None
+        elif kind == "digest":  # elide the version-vector snapshot:
+            tpay = (payload[0], payload[2])  # (round, nbytes)
+        elif kind == "recv":
+            tpay = payload[0]  # the key; the in-flight version rides along
+        else:
+            tpay = payload
+        trace.events.append((t, kind, c, tpay))
         if kind == "trained":
             if churn is not None and churn.departed(c, t):
                 continue  # client left before finishing this training
@@ -175,22 +212,72 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             for dst, key in targets:
                 send_model(c, dst, key, t)
         elif kind == "recv":
+            key, ver = payload
             away = churn is not None and not churn.is_online(c, t)
             if transport is not None:
-                transport.deliver(src, c, payload, lost=away)
+                transport.deliver(src, c, key, lost=away)
             if away:
                 n_lost_offline += 1  # receiver away: message is lost
+                if gossip is not None:  # NACK: sender must not believe it
+                    gossip.note_lost(src, c, key)
+                if repair is not None:
+                    # the loss re-opens a gap only c's own digests can
+                    # advertise — re-arm its (possibly quiesced) streams
+                    for dst in repair.wake(c, t):
+                        push(t + repair.cfg.interval, "digest_send", c,
+                             dst)
                 continue
             if gossip is not None:
-                accepted, forwards = gossip.on_receive(c, src, payload, t)
-                if accepted and payload not in bench[c]:
-                    admit(c, payload, t)
+                accepted, forwards = gossip.on_receive(c, src, key, t,
+                                                       version=ver)
+                if accepted and key not in bench[c]:
+                    admit(c, key, t)
                     schedule_select(c, t)
-                for dst, key in forwards:
-                    send_model(c, dst, key, t)
-            elif payload not in bench[c]:
-                admit(c, payload, t)
+                for dst, fkey in forwards:
+                    send_model(c, dst, fkey, t)
+            elif key not in bench[c]:
+                admit(c, key, t)
                 schedule_select(c, t)
+        elif kind == "digest_send":
+            entries, rnd, nb, again = repair.poll(c, payload, t)
+            if again:
+                push(t + repair.cfg.interval, "digest_send", c, payload)
+            if entries is not None:
+                arrival = transport.send(c, payload, (DIGEST_OWNER, rnd),
+                                         t, nbytes=nb)
+                if transport.last_outcome != "inbox":
+                    # inbox-rejected digests never touched the wire —
+                    # keep bytes_digests consistent with bytes_sent
+                    repair.stats.bytes_digests += nb
+                if arrival is not None:
+                    push(arrival, "digest", payload, (rnd, entries, nb),
+                         src=c)
+        elif kind == "digest":
+            rnd, entries, nb = payload
+            away = churn is not None and not churn.is_online(c, t)
+            transport.deliver(src, c, (DIGEST_OWNER, rnd), lost=away,
+                              nbytes=nb)
+            if away:
+                repair.stats.n_digests_lost += 1
+                continue
+            sends, rearm = repair.on_digest(c, src, entries, t)
+            for dst, key, ver, t_re in sends:
+                push(t_re, "resend", c, (dst, key, ver))
+            if rearm:  # src holds keys c lacks: restart c's digests to src
+                push(t + repair.cfg.interval, "digest_send", c, src)
+        elif kind == "resend":
+            dst, key, ver = payload
+            if churn is not None and not churn.is_online(c, t):
+                # swallowed before the transport: the attempt refunds so
+                # max_attempts bounds transmissions, not intentions
+                repair.refund_attempt(c, dst, key, ver)
+                n_lost_offline += 1
+            else:
+                send_model(c, dst, key, t, version=ver)
+                if transport.last_outcome == "inbox":
+                    # rejected at send time — nothing crossed the wire,
+                    # so this was not a transmission either
+                    repair.refund_attempt(c, dst, key, ver)
         elif kind == "select":
             pending_select.discard(c)
             ready = [c]
@@ -221,4 +308,6 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             trace.net["transport"] = transport.stats.as_dict()
         if gossip is not None:
             trace.net["gossip"] = gossip.stats.as_dict()
+        if repair is not None:
+            trace.net["repair"] = repair.stats.as_dict()
     return trace

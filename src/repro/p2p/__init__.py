@@ -1,14 +1,21 @@
 """Simulated peer-to-peer substrate: transport links, gossip protocol,
-and client churn (DESIGN.md §6). The async scheduler composes these."""
+client churn, and anti-entropy repair (DESIGN.md §6, §8). The async
+scheduler composes these."""
 from repro.p2p.churn import ChurnConfig, ChurnSchedule
 from repro.p2p.gossip import GossipConfig, GossipProtocol, GossipStats
-from repro.p2p.transport import (GossipTransport, TransportConfig,
-                                 TransportStats, checkpoint_bytes, edge_rng,
+from repro.p2p.repair import (AntiEntropyRepair, RepairConfig, RepairStats,
+                              digest_nbytes, repair_rng)
+from repro.p2p.transport import (DIGEST_OWNER, GossipTransport,
+                                 TransportConfig, TransportStats,
+                                 checkpoint_bytes, edge_rng,
                                  prediction_matrix_bytes)
 
 __all__ = [
+    "AntiEntropyRepair", "RepairConfig", "RepairStats",
     "ChurnConfig", "ChurnSchedule",
+    "DIGEST_OWNER",
     "GossipConfig", "GossipProtocol", "GossipStats",
     "GossipTransport", "TransportConfig", "TransportStats",
-    "checkpoint_bytes", "edge_rng", "prediction_matrix_bytes",
+    "checkpoint_bytes", "digest_nbytes", "edge_rng",
+    "prediction_matrix_bytes", "repair_rng",
 ]

@@ -22,6 +22,16 @@ stop propagating while remaining usable wherever they already landed.
 
 The protocol only *decides* targets; the scheduler performs the sends
 through the transport and reports them back via `note_sent`.
+
+The `note_sent` CONTRACT (the lossy-link fix): the scheduler calls
+`note_sent(c, dst, key)` only AFTER `transport.send` returned an arrival
+time — i.e. the message is actually in flight. A link-dropped or
+inbox-rejected send must NOT touch `peer_has`, otherwise the key is
+never re-targetable and dissemination under loss is permanently
+incomplete (not merely delayed). A message that was in flight but died
+at arrival (receiver offline) is reported back via `note_lost`, which
+invalidates the sender's belief so the push layer — and the anti-entropy
+repair subsystem (p2p.repair) — can re-deliver it later.
 """
 from __future__ import annotations
 
@@ -73,12 +83,18 @@ class GossipProtocol:
     # ---- helpers ------------------------------------------------------
     def _targets(self, c: int, key: ModelKey, version: int, t: float,
                  exclude: int = -1) -> List[int]:
-        """Neighbors that (as far as c knows) still need (key, version)."""
-        if self.churn is not None and self.churn.departed(key[0], t):
-            self.stats.n_suppressed += 1
-            return []
+        """Neighbors that (as far as c knows) still need (key, version).
+
+        `n_suppressed` counts individual suppressed FORWARDS (one per
+        would-be target of a departed owner's model) — the same unit the
+        push_pull reverse path uses, so the counter is comparable across
+        modes."""
         out = [dst for dst in self.neighbors[c]
-               if dst != exclude and key not in self.peer_has[c][dst]]
+               if dst != exclude and key not in self.peer_has[c].get(dst,
+                                                                     ())]
+        if self.churn is not None and self.churn.departed(key[0], t):
+            self.stats.n_suppressed += len(out)
+            return []
         if self.cfg.fanout and len(out) > self.cfg.fanout:
             # deterministic per-(client, model, version) subsample
             rng = np.random.default_rng(
@@ -88,9 +104,19 @@ class GossipProtocol:
         return out
 
     def note_sent(self, c: int, dst: int, key: ModelKey) -> None:
-        """The scheduler actually handed (c -> dst, key) to the transport.
-        Push has no acks, so c optimistically assumes delivery."""
+        """The message (c -> dst, key) is IN FLIGHT: `transport.send`
+        accepted it and returned an arrival time. Push has no e2e acks,
+        so c assumes in-flight implies delivered; a failed send (link
+        drop / inbox rejection) must never reach this call, and an
+        arrival that dies receiver-side is undone via `note_lost`."""
         self.peer_has[c].setdefault(dst, set()).add(key)
+
+    def note_lost(self, src: int, dst: int, key: ModelKey) -> None:
+        """The in-flight (src -> dst, key) never reached dst's protocol
+        state (receiver offline at arrival): invalidate src's belief so
+        the key stays re-targetable by later pushes and by anti-entropy
+        repair."""
+        self.peer_has[src].setdefault(dst, set()).discard(key)
 
     # ---- protocol events ---------------------------------------------
     def on_local(self, c: int, key: ModelKey, t: float,

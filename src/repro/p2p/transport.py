@@ -28,17 +28,26 @@ ModelKey = Tuple[int, int]  # (owner client, local model index)
 
 _EDGE_SALT = 0x9E3779B9  # domain-separates edge streams from other rngs
 
+# Sentinel "owner" for anti-entropy digest messages (p2p.repair): digests
+# share the link model — latency, drops, inboxes, byte accounting — but
+# must never collide with a real client id in the edge streams or log.
+DIGEST_OWNER = (1 << 31) - 1
+
 
 def edge_rng(seed: int, src: int, dst: int, key: ModelKey,
-             attempt: int = 0) -> np.random.Generator:
-    """Deterministic per-(src, dst, model, attempt) stream — fold_in style.
+             attempt: int = 0, version: int = 0) -> np.random.Generator:
+    """Deterministic per-(src, dst, model, attempt, version) stream —
+    fold_in style.
 
     The draw depends only on the edge identity and the seed, never on how
     many other events the simulator happened to process first, so traces
-    are reproducible under any heap tie-breaking."""
+    are reproducible under any heap tie-breaking. Folding the ATTEMPT and
+    the VERSION in keeps anti-entropy re-sends order-independent too: the
+    i-th retry of (key, version) over an edge draws the same (drop,
+    jitter) pair no matter when repair got around to scheduling it."""
     owner, idx = key
     return np.random.default_rng((_EDGE_SALT, seed, src, dst, owner, idx,
-                                  attempt))
+                                  attempt, version))
 
 
 def prediction_matrix_bytes(n_val: int, n_classes: int,
@@ -69,8 +78,9 @@ class TransportStats:
     n_delivered: int = 0
     n_dropped_link: int = 0         # lost to drop_prob
     n_dropped_inbox: int = 0        # rejected by the bounded inbox
-    bytes_sent: int = 0
+    bytes_sent: int = 0             # bytes that actually crossed the wire
     bytes_delivered: int = 0
+    bytes_rejected: int = 0         # inbox-rejected bytes: never on the wire
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -89,46 +99,67 @@ class GossipTransport:
         self.cfg = cfg
         self.size_fn = size_fn
         self.inflight = np.zeros(n_clients, np.int64)
-        self._attempts: Dict[Tuple[int, int, ModelKey], int] = {}
+        self._attempts: Dict[Tuple[int, int, ModelKey, int], int] = {}
         self.stats = TransportStats()
         self.log: list = []  # (t_send, src, dst, key, "ok"|"drop"|"inbox")
+        self.last_outcome: str = ""  # outcome of the most recent send()
+        # ^ the sim is single-threaded, so callers that need to react to
+        #   the outcome (repair: refund inbox-rejected attempts, book
+        #   digest wire bytes) read this instead of diffing the stats
 
-    def send(self, src: int, dst: int, key: ModelKey,
-             t: float) -> Optional[float]:
-        """Price, maybe drop, maybe reject, else return the arrival time."""
-        nbytes = int(self.size_fn(src, dst, key))
+    def send(self, src: int, dst: int, key: ModelKey, t: float,
+             nbytes: Optional[int] = None,
+             version: int = 0) -> Optional[float]:
+        """Price, maybe drop, maybe reject, else return the arrival time.
+
+        `nbytes` overrides the `size_fn` pricing — anti-entropy digests
+        (variable-width version-vector summaries) pass their own size but
+        otherwise ride the same link model. A link-dropped message books
+        `bytes_sent` (it crossed the wire and was lost in flight); an
+        inbox-rejected one books `bytes_rejected` instead — backpressure
+        rejects at send time, so those bytes never touch the link."""
+        nbytes = int(self.size_fn(src, dst, key)) if nbytes is None \
+            else int(nbytes)
         self.stats.n_sent += 1
-        self.stats.bytes_sent += nbytes
-        edge = (src, dst, key)
+        edge = (src, dst, key, version)
         attempt = self._attempts.get(edge, 0)
         self._attempts[edge] = attempt + 1
-        rng = edge_rng(self.cfg.seed, src, dst, key, attempt)
+        rng = edge_rng(self.cfg.seed, src, dst, key, attempt, version)
         # one stream decides (drop, jitter) so re-sends get fresh draws
         # but the trace stays independent of global event order
         dropped = rng.random() < self.cfg.drop_prob
         jitter = rng.random()
         if dropped:
             self.stats.n_dropped_link += 1
+            self.stats.bytes_sent += nbytes
             self.log.append((t, src, dst, key, "drop"))
+            self.last_outcome = "drop"
             return None
         if self.cfg.inbox_capacity and \
                 self.inflight[dst] >= self.cfg.inbox_capacity:
             self.stats.n_dropped_inbox += 1
+            self.stats.bytes_rejected += nbytes
             self.log.append((t, src, dst, key, "inbox"))
+            self.last_outcome = "inbox"
             return None
+        self.stats.bytes_sent += nbytes
         self.inflight[dst] += 1
         lat = self.cfg.base_latency * (1.0 + self.cfg.jitter * jitter)
         if np.isfinite(self.cfg.bandwidth):
             lat += nbytes / self.cfg.bandwidth
         self.log.append((t, src, dst, key, "ok"))
+        self.last_outcome = "ok"
         return t + lat
 
     def deliver(self, src: int, dst: int, key: ModelKey,
-                lost: bool = False) -> None:
+                lost: bool = False, nbytes: Optional[int] = None) -> None:
         """Called by the scheduler when the recv event fires: frees the
         inbox slot always, and books the delivered bytes unless the
-        receiver lost the message (e.g. it was offline at arrival)."""
+        receiver lost the message (e.g. it was offline at arrival).
+        `nbytes` mirrors `send`'s override for digest messages."""
         self.inflight[dst] -= 1
         if not lost:
             self.stats.n_delivered += 1
-            self.stats.bytes_delivered += int(self.size_fn(src, dst, key))
+            self.stats.bytes_delivered += (
+                int(self.size_fn(src, dst, key)) if nbytes is None
+                else int(nbytes))

@@ -38,9 +38,12 @@ def test_edge_streams_are_order_independent():
             for s, d, k in reversed(sends)}
     assert out1 == out2
     assert any(a is None for a in out1.values())  # drops do occur
-    # re-sends of the same message get a fresh (attempt-indexed) draw
+    # re-sends of the same (message, version) get a fresh attempt-indexed
+    # draw; a different version runs its own independent attempt stream
     t1.send(0, 1, (0, 0), 5.0)
-    assert t1._attempts[(0, 1, (0, 0))] == 2
+    assert t1._attempts[(0, 1, (0, 0), 0)] == 2
+    t1.send(0, 1, (0, 0), 6.0, version=1)
+    assert t1._attempts[(0, 1, (0, 0), 1)] == 1
 
 
 def test_transfer_time_scales_with_message_size():
@@ -75,6 +78,49 @@ def test_bounded_inbox_rejects_then_recovers():
     assert tr.stats.n_dropped_inbox == 1
     tr.deliver(0, 1, (0, 0))                            # frees a slot
     assert tr.send(3, 1, (3, 0), 0.1) is not None
+
+
+def test_inbox_rejected_bytes_never_hit_the_wire():
+    """Satellite: backpressure rejects at SEND time — those bytes never
+    crossed the link, so they book into bytes_rejected, not bytes_sent
+    (the bytes-on-wire curves used to over-report them)."""
+    nb = prediction_matrix_bytes(V, C)
+    tr = GossipTransport(TransportConfig(drop_prob=0.0, inbox_capacity=1),
+                         3, _pred_size_fn)
+    assert tr.send(0, 1, (0, 0), 0.0) is not None
+    assert tr.last_outcome == "ok"
+    assert tr.send(2, 1, (2, 0), 0.0) is None          # rejected
+    assert tr.last_outcome == "inbox"
+    assert tr.stats.bytes_sent == nb                   # only the 1st
+    assert tr.stats.bytes_rejected == nb
+    # link-dropped bytes DID cross the wire: they stay in bytes_sent
+    tr2 = GossipTransport(TransportConfig(drop_prob=1.0), 3, _pred_size_fn)
+    assert tr2.send(0, 1, (0, 0), 0.0) is None
+    assert tr2.last_outcome == "drop"
+    assert tr2.stats.bytes_sent == nb
+    assert tr2.stats.bytes_rejected == 0
+
+
+def test_model_versions_survive_delivery():
+    """The recv event carries the sender's version of the key, so
+    `on_receive` records it faithfully — a version-vector layer whose
+    versions reset to 0 in flight could never propagate an upgrade."""
+
+    class _V1Gossip(GossipProtocol):
+        def on_local(self, c, key, t, version=0):
+            return super().on_local(c, key, t, version=1)
+
+    n = 3
+    acfg = AsyncConfig(n_clients=n, models_per_client=1, seed=0)
+    nb = make_topology("full", n)
+    gossip = _V1Gossip(GossipConfig(mode="push", seed=0), nb)
+    transport = GossipTransport(TransportConfig(drop_prob=0.0, seed=0), n,
+                                _pred_size_fn)
+    simulate_async(acfg, nb, train_cost=lambda c, m: 1.0,
+                   transport=transport, gossip=gossip)
+    for c in range(n):
+        assert gossip.have[c] == {(o, 0): 1 for o in range(n)}, \
+            f"client {c} must hold every model at the SENT version"
 
 
 def test_prediction_matrix_is_at_least_10x_cheaper_than_checkpoints():
@@ -128,6 +174,86 @@ def test_version_vectors_dedupe_instead_of_flooding():
     n_sends = sum(1 for _, kind, *_ in trace.events if kind == "recv")
     blind = n * mpc * n * (n - 1)  # every node re-broadcasts everything
     assert n_sends < blind
+
+
+class _StubChurn:
+    """Deterministic hand-written availability for unit tests: `offline`
+    maps client -> list of (t0, t1) windows where it is unreachable."""
+
+    def __init__(self, n, offline=None, departed_at=None):
+        self.join = np.zeros(n)
+        self.leave = np.full(n, np.inf)
+        if departed_at:
+            for c, t in departed_at.items():
+                self.leave[c] = t
+        self._off = offline or {}
+
+    def is_online(self, c, t):
+        if t < self.join[c] or t >= self.leave[c]:
+            return False
+        return not any(a <= t < b for a, b in self._off.get(c, ()))
+
+    def departed(self, c, t):
+        return t >= self.leave[c]
+
+
+def test_suppressed_counts_per_forward_on_both_paths():
+    """Satellite: `n_suppressed` used to count once per `_targets` call
+    on the push path but once per forward on the push-pull path. The
+    unit is now PER SUPPRESSED FORWARD everywhere."""
+    nb = [[1, 2, 3], [0], [0], [0]]
+    churn = _StubChurn(4, departed_at={0: 5.0})
+    g = GossipProtocol(GossipConfig(mode="push_pull", seed=0), nb,
+                       churn=churn)
+    # push path: owner 0 departed, 3 would-be targets -> +3, not +1
+    g.have[0][(0, 0)] = 0
+    assert g._targets(0, (0, 0), 0, t=6.0) == []
+    assert g.stats.n_suppressed == 3
+    # push_pull reverse path: client 1 holds a departed owner's model;
+    # accepting something new from 0 suppresses exactly that one forward
+    g.have[1][(0, 1)] = 0
+    accepted, forwards = g.on_receive(1, 0, (2, 0), t=6.0)
+    assert accepted
+    assert g.stats.n_suppressed == 4
+    assert all(key[0] != 0 for _, key in forwards)
+
+
+def test_failed_send_leaves_peer_retargetable():
+    """Satellite regression (the optimistic-ack bug): with every message
+    on the 0<->1 edge dropped, `note_sent` must never fire, so the
+    sender still believes the peer lacks the model — it stays
+    re-targetable instead of being poisoned into `peer_has` forever."""
+    cfg = TransportConfig(drop_prob=1.0, seed=0)
+    trace, gossip, transport = _run_gossip(topo="ring", n=2, mpc=1,
+                                           transport_cfg=cfg)
+    assert transport.stats.n_dropped_link > 0
+    assert transport.stats.n_delivered == 0
+    for c, other in ((0, 1), (1, 0)):
+        assert gossip.peer_has[c][other] == set(), \
+            "dropped send must not poison peer_has"
+        assert gossip._targets(c, (c, 0), 0, t=99.0) == [other], \
+            "model must still be re-targetable after the drop"
+
+
+def test_offline_arrival_is_nacked_not_acked():
+    """A message that was in flight when the receiver went offline is
+    LOST: the sender's belief must be invalidated (note_lost), so the
+    key stays re-targetable once the receiver returns."""
+    acfg = AsyncConfig(n_clients=2, models_per_client=1, seed=0,
+                       speed_lognorm_sigma=0.0)
+    nb = make_topology("ring", 2)
+    churn = _StubChurn(2, offline={1: [(0.0, 50.0)]})
+    gossip = GossipProtocol(GossipConfig(mode="push", seed=0), nb,
+                            churn=churn)
+    transport = GossipTransport(TransportConfig(drop_prob=0.0, seed=0), 2,
+                                _pred_size_fn)
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0,
+                           transport=transport, gossip=gossip, churn=churn)
+    assert trace.net["lost_offline"] > 0
+    key = (0, 0)
+    assert key in gossip.have[0] and key not in gossip.have[1]
+    assert key not in gossip.peer_has[0][1], \
+        "receiver-offline arrival must NACK the sender's belief"
 
 
 def test_gossip_trace_deterministic_and_seed_sensitive():

@@ -1,0 +1,294 @@
+"""Anti-entropy repair subsystem tests (DESIGN.md §8): digest pricing
+through the transport, gap detection with budget / backoff / attempt
+caps, quiesce + re-arm lifecycle, churn x loss interaction (offline
+arrival is lost but repaired once the client returns), full-dissemination
+convergence on a lossy ring where the no-repair baseline provably
+stalls, and bit-identical traces under a fixed seed."""
+import numpy as np
+import pytest
+
+from repro.fl.scheduler import AsyncConfig, simulate_async
+from repro.fl.topology import make_topology
+from repro.p2p import (AntiEntropyRepair, DIGEST_OWNER, GossipConfig,
+                       GossipProtocol, GossipTransport, RepairConfig,
+                       TransportConfig, digest_nbytes,
+                       prediction_matrix_bytes, repair_rng)
+
+V, C = 64, 5
+
+
+def _pred_size_fn(src, dst, key):
+    return prediction_matrix_bytes(V, C)
+
+
+def _world(topo="ring", n=8, mpc=2, drop=0.1, seed=0, churn=None,
+           repair_cfg=None):
+    nb = make_topology(topo, n, seed=seed)
+    gossip = GossipProtocol(GossipConfig(mode="push", seed=seed), nb,
+                            churn=churn)
+    transport = GossipTransport(
+        TransportConfig(base_latency=0.05, drop_prob=drop,
+                        bandwidth=1e6, inbox_capacity=64, seed=seed),
+        n, _pred_size_fn)
+    repair = None
+    if repair_cfg is not None:
+        repair = AntiEntropyRepair(repair_cfg, gossip, churn=churn)
+    return nb, gossip, transport, repair
+
+
+def _run(topo="ring", n=8, mpc=2, drop=0.1, seed=0, churn=None,
+         repair_cfg=None):
+    nb, gossip, transport, repair = _world(topo, n, mpc, drop, seed,
+                                           churn, repair_cfg)
+    acfg = AsyncConfig(n_clients=n, models_per_client=mpc, seed=seed)
+    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
+                           transport=transport, gossip=gossip, churn=churn,
+                           repair=repair)
+    return trace, gossip, transport, repair
+
+
+def _coverage(trace, n, mpc):
+    finals = [s[-1][1] if s else 0 for s in trace.bench_sizes.values()]
+    return sum(finals) / (n * n * mpc)
+
+
+REPAIR_CFG = RepairConfig(interval=1.0, start=1.0, max_rounds=40,
+                          quiesce_after=2, max_attempts=8,
+                          max_resends_per_digest=8, seed=0)
+
+
+# -------------------------------------------------- acceptance criterion
+
+def test_repair_reaches_full_dissemination_where_push_alone_stalls():
+    """ISSUE acceptance: drop_prob=0.1 on a ring — with repair every
+    client eventually holds every model; without it, dissemination is
+    permanently incomplete (a dropped forward is never re-sent because
+    pushes only fire on trained/recv events)."""
+    t_off, _, _, _ = _run(drop=0.1)
+    t_on, _, _, rep = _run(drop=0.1, repair_cfg=REPAIR_CFG)
+    assert _coverage(t_off, 8, 2) < 1.0, "baseline must stall at this seed"
+    assert _coverage(t_on, 8, 2) == 1.0
+    assert rep.stats.n_resends > 0 and rep.stats.n_gaps_found > 0
+    assert t_on.net["repair"]["n_resends"] == rep.stats.n_resends
+
+
+def test_repair_trace_is_bit_identical_across_runs():
+    """Order-independent retry streams: two runs with the same seed must
+    produce identical events, transport logs, and repair counters."""
+    t1, _, tr1, r1 = _run(drop=0.1, repair_cfg=REPAIR_CFG)
+    t2, _, tr2, r2 = _run(drop=0.1, repair_cfg=REPAIR_CFG)
+    assert t1.events == t2.events
+    assert tr1.log == tr2.log
+    assert r1.stats == r2.stats
+    t3, _, _, _ = _run(drop=0.1, seed=3, repair_cfg=RepairConfig(
+        interval=1.0, start=1.0, max_rounds=40, quiesce_after=2,
+        max_attempts=8, seed=3))
+    assert t3.events != t1.events  # seed-sensitive, not constant
+
+
+# ------------------------------------------------------- digest pricing
+
+def test_digests_are_priced_through_the_transport():
+    """Digests cost real bytes-on-wire (bytes_per_entry per (key,
+    version) pair), ride the same drop/latency/inbox model, and land in
+    both RepairStats and TransportStats."""
+    t_on, _, transport, rep = _run(drop=0.0, repair_cfg=REPAIR_CFG)
+    t_off, _, transport_off, _ = _run(drop=0.0)
+    assert rep.stats.n_digests_sent > 0
+    assert rep.stats.bytes_digests > 0
+    extra = transport.stats.bytes_sent - transport_off.stats.bytes_sent
+    assert extra == rep.stats.bytes_digests, \
+        "with no drops, the wire-byte delta must be exactly the digests"
+    digest_msgs = [e for e in transport.log if e[3][0] == DIGEST_OWNER]
+    assert len(digest_msgs) == rep.stats.n_digests_sent
+    assert digest_nbytes(0, 12) == 12  # empty digest still costs a header
+
+
+def test_lossless_run_schedules_no_resends():
+    """With no loss and no churn the in-flight skip keeps repair silent:
+    digests circulate, find nothing to do, and every edge quiesces."""
+    _, _, _, rep = _run(drop=0.0, repair_cfg=REPAIR_CFG)
+    assert rep.stats.n_resends == 0
+    assert rep.stats.n_gaps_found == 0
+    assert rep.stats.n_quiesced > 0
+
+
+# ------------------------------------------- bounded, deterministic plan
+
+def _manual_gossip(n=4):
+    nb = [[j for j in range(n) if j != i] for i in range(n)]
+    return GossipProtocol(GossipConfig(mode="push", seed=0), nb)
+
+
+def test_on_digest_budget_backoff_and_exhaustion():
+    gossip = _manual_gossip()
+    cfg = RepairConfig(max_resends_per_digest=2, max_attempts=2,
+                       backoff_base=0.5, backoff_factor=2.0, seed=0)
+    rep = AntiEntropyRepair(cfg, gossip)
+    for m in range(5):  # client 0 holds 5 models client 1 lacks
+        gossip.have[0][(0, m)] = 0
+    sends, rearm = rep.on_digest(0, 1, (), t=10.0)
+    assert len(sends) == 2 and rep.stats.n_budget_deferred == 3
+    assert not rearm  # the digest offered nothing we lack
+    # first-attempt backoff: base * factor**0 * (1 + U[0,1)) in [.5, 1)
+    for dst, key, ver, t_re in sends:
+        assert dst == 1 and ver == 0
+        jit = repair_rng(cfg.seed, 0, 1, key, 0, 0).random()
+        assert t_re == pytest.approx(10.0 + 0.5 * (1 + jit))
+    # second digest round: the same 2 keys burn attempt 2 with a longer,
+    # attempt-indexed backoff; round 3+ exhausts them
+    sends2, _ = rep.on_digest(0, 1, (), t=20.0)
+    assert [k for _, k, _, _ in sends2] == [k for _, k, _, _ in sends]
+    for dst, key, ver, t_re in sends2:
+        jit = repair_rng(cfg.seed, 0, 1, key, 1, 0).random()
+        assert t_re == pytest.approx(20.0 + 0.5 * 2.0 * (1 + jit))
+    rep.on_digest(0, 1, (), t=30.0)
+    rep.on_digest(0, 1, (), t=40.0)
+    assert rep.stats.n_attempts_exhausted == 2
+    sends5, _ = rep.on_digest(0, 1, (), t=50.0)
+    assert all(k not in {s[1] for s in sends2} for _, k, _, _ in sends5)
+
+
+def test_asymmetric_overlay_digest_does_not_crash():
+    """A digest arriving over a one-way edge must not re-arm (or KeyError
+    on) the nonexistent reverse stream."""
+    gossip = GossipProtocol(GossipConfig(mode="push", seed=0), [[1], []])
+    rep = AntiEntropyRepair(RepairConfig(seed=0), gossip)
+    sends, rearm = rep.on_digest(1, 0, (((0, 0), 0),), t=5.0)
+    assert sends == [] and not rearm
+    assert (1, 0) not in rep.active and (1, 0) not in rep.rounds
+
+
+def test_on_digest_rearms_reverse_stream_when_remote_has_more():
+    """A digest advertising keys the receiver LACKS must re-arm the
+    receiver's own (ended) digest stream toward the sender — push-only
+    repair has no fetch, so the sender must be told about the gap."""
+    gossip = _manual_gossip()
+    rep = AntiEntropyRepair(RepairConfig(seed=0), gossip)
+    rep.active.discard((0, 1))  # stream 0 -> 1 already quiesced
+    rep.calm[(0, 1)] = 99
+    sends, rearm = rep.on_digest(0, 1, (((5, 0), 0),), t=10.0)
+    assert sends == [] and rearm
+    assert (0, 1) in rep.active and rep.calm[(0, 1)] == 0
+    # already-active stream: calm resets but no duplicate scheduling
+    sends, rearm = rep.on_digest(0, 1, (((5, 1), 0),), t=11.0)
+    assert not rearm
+
+
+def test_inflight_copies_are_not_resent():
+    """peer_has is truthful post-fix: a key the receiver already sent
+    successfully (in flight, digest predates it) is skipped, not
+    re-pushed."""
+    gossip = _manual_gossip()
+    rep = AntiEntropyRepair(RepairConfig(seed=0), gossip)
+    gossip.have[0][(0, 0)] = 0
+    gossip.note_sent(0, 1, (0, 0))  # accepted by the transport
+    sends, _ = rep.on_digest(0, 1, (), t=5.0)
+    assert sends == []
+    assert rep.stats.n_inflight_skipped == 1
+    # after a NACK (receiver was offline at arrival) it is a gap again
+    gossip.note_lost(0, 1, (0, 0))
+    sends, _ = rep.on_digest(0, 1, (), t=6.0)
+    assert [k for _, k, _, _ in sends] == [(0, 0)]
+
+
+def test_departed_owners_models_are_not_repaired():
+    from tests.test_p2p import _StubChurn
+    churn = _StubChurn(4, departed_at={3: 1.0})
+    gossip = _manual_gossip()
+    gossip.churn = churn
+    rep = AntiEntropyRepair(RepairConfig(seed=0), gossip)
+    assert rep.churn is churn  # inherited from the gossip layer
+    gossip.have[0][(3, 0)] = 0  # a departed owner's model
+    gossip.have[0][(0, 0)] = 0
+    sends, _ = rep.on_digest(0, 1, (), t=5.0)
+    assert [k for _, k, _, _ in sends] == [(0, 0)]
+    # a digest ADVERTISING only a departed owner's key must not re-arm
+    # the reverse stream (the gap is unrepairable by design) ...
+    rep.active.discard((1, 0))
+    sends, rearm = rep.on_digest(1, 0, (((3, 0), 0),), t=5.0)
+    assert sends == [] and not rearm
+    # ... and a departed SENDER's digest streams end instead of ticking
+    # no-op rounds until max_rounds
+    churn.leave[2] = 1.0
+    assert rep.poll(2, 0, t=5.0) == (None, 0, 0, False)
+    assert (2, 0) not in rep.active
+
+
+def test_swallowed_resend_refunds_the_attempt():
+    """A re-send that fires while the holder is offline never reaches
+    the transport — the attempt must refund, so max_attempts bounds
+    actual transmissions (a holder with unlucky offline windows used to
+    exhaust its budget without ever sending)."""
+    gossip = _manual_gossip()
+    rep = AntiEntropyRepair(RepairConfig(max_attempts=1, seed=0), gossip)
+    gossip.have[0][(0, 0)] = 0
+    sends, _ = rep.on_digest(0, 1, (), t=5.0)
+    assert len(sends) == 1 and rep.attempts[(0, 1, (0, 0), 0)] == 1
+    rep.refund_attempt(0, 1, (0, 0), 0)  # scheduler: holder was offline
+    assert rep.attempts[(0, 1, (0, 0), 0)] == 0
+    sends, _ = rep.on_digest(0, 1, (), t=7.0)  # attempt available again
+    assert [k for _, k, _, _ in sends] == [(0, 0)]
+    assert rep.stats.n_attempts_exhausted == 0
+
+
+# ---------------------------------------------------------- churn x loss
+
+def test_offline_arrival_is_repaired_once_client_returns():
+    """Satellite: a client offline at arrival (lost=away) must NOT count
+    as having received the model — and once it is back online, the
+    digest loop must re-deliver. The no-repair run shows the loss is
+    otherwise permanent."""
+    from tests.test_p2p import _StubChurn
+    n, mpc = 4, 1
+    make = lambda: _StubChurn(n, offline={1: [(0.0, 6.0)]})  # noqa: E731
+    t_off, g_off, _, _ = _run(topo="full", n=n, mpc=mpc, drop=0.0,
+                              churn=make())
+    key = (0, 0)
+    assert key not in g_off.have[1], \
+        "offline client must not be treated as having received the model"
+    assert key not in g_off.peer_has[0][1]  # NACK kept it re-targetable
+    cfg = RepairConfig(interval=1.0, start=1.0, max_rounds=30,
+                       quiesce_after=2, max_attempts=8, seed=0)
+    t_on, g_on, _, rep = _run(topo="full", n=n, mpc=mpc, drop=0.0,
+                              churn=make(), repair_cfg=cfg)
+    for owner in range(n):
+        assert (owner, 0) in g_on.have[1], \
+            f"repair must re-deliver ({owner}, 0) after the offline window"
+    assert rep.stats.n_resends > 0
+    # the re-delivery happened strictly after client 1 came back online
+    redeliveries = [t for t, kind, c, payload in t_on.events
+                    if kind == "recv" and c == 1 and payload == key
+                    and t >= 6.0]
+    assert redeliveries, "the repaired copy must arrive after t=6"
+
+
+def test_repair_with_real_churn_schedule_is_deterministic():
+    """Full stack: lognormal churn + 10% drops + repair on a small-world
+    overlay stays a pure function of the seed."""
+    from repro.p2p import ChurnConfig, ChurnSchedule
+
+    def go():
+        n = 12
+        churn = ChurnSchedule(ChurnConfig(availability_beta=0.2,
+                                          leave_prob=0.1, seed=4), n)
+        return _run(topo="small_world", n=n, mpc=2, drop=0.1, seed=4,
+                    churn=churn, repair_cfg=RepairConfig(
+                        interval=1.0, max_rounds=20, seed=4))
+
+    t1, _, tr1, r1 = go()
+    t2, _, tr2, r2 = go()
+    assert t1.events == t2.events
+    assert tr1.stats == tr2.stats
+    assert r1.stats == r2.stats
+    assert t1.net == t2.net
+
+
+def test_repair_requires_transport_and_gossip():
+    nb = make_topology("ring", 4)
+    gossip = GossipProtocol(GossipConfig(seed=0), nb)
+    rep = AntiEntropyRepair(RepairConfig(), gossip)
+    acfg = AsyncConfig(n_clients=4, models_per_client=1)
+    with pytest.raises(ValueError, match="repair requires"):
+        simulate_async(acfg, nb, train_cost=lambda c, m: 1.0,
+                       gossip=gossip, repair=rep)
