@@ -12,24 +12,33 @@ import numpy as np
 
 
 def bench_table1_accuracy():
-    """Table I (reduced): FedPAE vs local vs FedAvg vs one pFL baseline."""
-    from benchmarks.common import make_clients, row
-    from repro.core.fedpae import FedPAEConfig, run_fedpae, run_local_ensemble
-    from repro.core.nsga2 import NSGAConfig
+    """Table I (reduced): FedPAE vs local vs FedAvg vs one pFL baseline.
+    The FedPAE run is one declarative spec (repro.sim); the FL baselines
+    reuse its datasets."""
+    from benchmarks.common import row
     from repro.fl.baselines import BASELINES, FLConfig
+    from repro.sim import (DataSpec, Experiment, ExperimentSpec,
+                           ScheduleSpec, SelectionSpec, TrainSpec)
 
-    datasets, _ = make_clients(4, 0.1, 2400, 8, seed=0)
-    cfg = FedPAEConfig(families=("cnn4", "vgg", "resnet"), ensemble_k=3,
-                       nsga=NSGAConfig(pop_size=32, generations=20, k=3),
-                       max_epochs=10, patience=4, width=12)
-    fl = FLConfig(rounds=40, local_steps=2, families=cfg.families, width=12)
+    spec = ExperimentSpec(
+        data=DataSpec(kind="synthetic_images", n_clients=4, n_classes=8,
+                      n_samples=2400, alpha=0.1),
+        train=TrainSpec(families=("cnn4", "vgg", "resnet"),
+                        max_epochs=10, patience=4, width=12),
+        selection=SelectionSpec(pop_size=32, generations=20, k=3,
+                                ensemble_k=3),
+        schedule=ScheduleSpec(mode="sync"), seed=0)
+    exp = Experiment.from_spec(spec)
+    fl = FLConfig(rounds=40, local_steps=2,
+                  families=spec.train.families, width=12)
+    exp.prepare_data()  # data generation stays OUTSIDE the timed region
     t0 = time.perf_counter()
-    local_acc, models, ccfg = run_local_ensemble(datasets, 8, cfg)
-    res = run_fedpae(datasets, 8, cfg, models=models, ccfg=ccfg)
+    local_acc = exp.local_ensemble()
+    res = exp.run()
     t_fedpae = (time.perf_counter() - t0) * 1e6
     accs = {"local": local_acc.mean(), "fedpae": res.test_acc.mean()}
     for m in ("fedavg", "lg_fedavg"):
-        accs[m] = BASELINES[m](datasets, 8, fl).mean()
+        accs[m] = BASELINES[m](exp.datasets, 8, fl).mean()
     row("table1_accuracy", t_fedpae,
         " ".join(f"{k}={v:.3f}" for k, v in accs.items()))
     return local_acc, res
@@ -46,16 +55,22 @@ def bench_table2_negative_transfer(local_acc, res):
 
 def bench_table3_scalability():
     """Table III (reduced): doubled client count, same total data."""
-    from benchmarks.common import make_clients, row
-    from repro.core.fedpae import FedPAEConfig, run_fedpae, run_local_ensemble
-    from repro.core.nsga2 import NSGAConfig
-    datasets, _ = make_clients(8, 0.1, 2400, 8, seed=0)
-    cfg = FedPAEConfig(families=("cnn4", "vgg"), ensemble_k=3,
-                       nsga=NSGAConfig(pop_size=32, generations=15, k=3),
-                       max_epochs=8, patience=3, width=12)
+    from benchmarks.common import row
+    from repro.sim import (DataSpec, Experiment, ExperimentSpec,
+                           ScheduleSpec, SelectionSpec, TrainSpec)
+    spec = ExperimentSpec(
+        data=DataSpec(kind="synthetic_images", n_clients=8, n_classes=8,
+                      n_samples=2400, alpha=0.1),
+        train=TrainSpec(families=("cnn4", "vgg"), max_epochs=8,
+                        patience=3, width=12),
+        selection=SelectionSpec(pop_size=32, generations=15, k=3,
+                                ensemble_k=3),
+        schedule=ScheduleSpec(mode="sync"), seed=0)
+    exp = Experiment.from_spec(spec)
+    exp.prepare_data()  # data generation stays OUTSIDE the timed region
     t0 = time.perf_counter()
-    local_acc, models, ccfg = run_local_ensemble(datasets, 8, cfg)
-    res = run_fedpae(datasets, 8, cfg, models=models, ccfg=ccfg)
+    local_acc = exp.local_ensemble()
+    res = exp.run()
     row("table3_scalability", (time.perf_counter() - t0) * 1e6,
         f"clients=8 local={local_acc.mean():.3f} fedpae={res.test_acc.mean():.3f}")
 
@@ -173,66 +188,64 @@ def bench_gossip_scale():
     """Gossip transport at 16/64/128 clients: bytes on the wire
     (prediction-matrix vs checkpoint exchange), streaming-store eviction
     counts at capacity 16, message-loss counters, and the one-shot
-    batched selection latency over the full fleet."""
+    batched selection latency over the full fleet. Each fleet size is
+    one declarative spec (`select_during_run=False`: arrivals fill the
+    bounded stores, selection is timed separately below)."""
     import jax
     import jax.numpy as jnp
     from benchmarks.common import row, timed
-    from repro.core.bench import (BenchEntry, StreamingPredictionStore,
-                                  stack_stores)
+    from repro.core.bench import stack_stores
     from repro.core.nsga2 import NSGAConfig, client_keys
     from repro.core.selection import select_ensembles
-    from repro.fl.scheduler import AsyncConfig, simulate_async
-    from repro.fl.topology import make_topology
-    from repro.p2p import (ChurnConfig, ChurnSchedule, GossipConfig,
-                           GossipProtocol, GossipTransport, TransportConfig,
-                           checkpoint_bytes, prediction_matrix_bytes)
+    from repro.p2p import checkpoint_bytes
+    from repro.sim import (ComponentSpec, DataSpec, Experiment,
+                           ExperimentSpec, NetworkSpec, ScheduleSpec,
+                           SelectionSpec)
 
     V, C, MPC, CAP = 128, 8, 2, 16
     n_params = 250_000  # checkpoint-exchange baseline (width-16 CNN scale)
     cfg = NSGAConfig(pop_size=32, generations=10, k=5, seed=0)
     for n in (16, 64, 128):
-        rng = np.random.default_rng(n)
-        stores = [StreamingPredictionStore(
-            c, CAP, np.zeros((V, 2), np.float32),
-            rng.integers(0, C, V), C) for c in range(n)]
-        nb = make_topology("small_world", n, k=4, seed=0)
-        churn = ChurnSchedule(ChurnConfig(availability_beta=0.1,
-                                          leave_prob=0.05, seed=0), n)
-        gossip = GossipProtocol(GossipConfig(mode="push", seed=0), nb,
-                                churn=churn)
-        transport = GossipTransport(
-            TransportConfig(base_latency=0.05, drop_prob=0.1,
-                            bandwidth=50e6, inbox_capacity=64, seed=0),
-            n, lambda s, d, k: prediction_matrix_bytes(V, C))
-
-        def on_add(c, key, t, stores=stores, rng=rng):
-            owner, m = key
-            p = rng.random((V, C)).astype(np.float32)
-            stores[c].add(BenchEntry(model_id=owner * MPC + m, owner=owner,
-                                     family="f",
-                                     predict=lambda x: p[:len(x)]),
-                          preds=p / p.sum(1, keepdims=True), t=t)
-
-        acfg = AsyncConfig(n_clients=n, models_per_client=MPC,
-                           select_debounce=0.5, seed=0)
-        t0 = time.perf_counter()
-        simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
-                       on_add=on_add, transport=transport, gossip=gossip,
-                       churn=churn)
+        spec = ExperimentSpec(
+            data=DataSpec(kind="prediction_world", n_clients=n,
+                          n_classes=C, n_val=V, models_per_client=MPC,
+                          seed=n),
+            # no engine: the sim only fills the bounded stores, and the
+            # one-shot selection below is timed separately (the legacy
+            # benchmark built no engine either)
+            selection=SelectionSpec(enabled=False, store_capacity=CAP),
+            network=NetworkSpec(
+                topology="small_world", topology_k=4,
+                transport=ComponentSpec("gossip", {
+                    "base_latency": 0.05, "drop_prob": 0.1,
+                    "bandwidth": 50e6, "inbox_capacity": 64}),
+                gossip="push",
+                churn=ComponentSpec("lognormal", {
+                    "availability_beta": 0.1, "leave_prob": 0.05})),
+            schedule=ScheduleSpec(
+                mode="async", select_debounce=0.5,
+                train_cost=ComponentSpec("affine",
+                                         {"base": 1.0, "slope": 0.2})),
+            seed=0)
+        exp = Experiment.from_spec(spec)
+        exp.build()  # world + stores + p2p stack outside the timer —
+        t0 = time.perf_counter()  # the row times the simulation itself
+        res = exp.run()
         dt_sim = time.perf_counter() - t0
-        evictions = sum(s.evictions for s in stores)
-        pred_bytes = transport.stats.bytes_sent
-        msgs = transport.stats.n_sent
+        evictions = sum(s.evictions for s in res.stores)
+        tstats = res.net["transport"]
+        pred_bytes = tstats["bytes_sent"]
+        msgs = tstats["n_sent"]
         ckpt_bytes = msgs * checkpoint_bytes(n_params)
         row(f"gossip_sim_N{n}", dt_sim * 1e6,
             f"msgs={msgs} pred_MB={pred_bytes/1e6:.1f} "
             f"ckpt_MB={ckpt_bytes/1e6:.0f} "
             f"ratio={ckpt_bytes/max(pred_bytes,1):.0f}x "
             f"evictions={evictions} "
-            f"dropped={transport.stats.n_dropped_link}")
+            f"dropped={tstats['n_dropped_link']}")
 
         # one-shot batched selection latency over the whole fleet
-        preds, labels, masks = stack_stores(stores)
+        preds, labels, masks = stack_stores(res.stores)
         keys = client_keys(cfg.seed, np.arange(n))
         jp, jl, jm = (jnp.asarray(preds), jnp.asarray(labels),
                       jnp.asarray(masks))
@@ -247,38 +260,41 @@ def bench_lossy_repair():
     """Anti-entropy repair (DESIGN.md §8) at 16/64 clients on a lossy
     ring: dissemination coverage with vs without the digest/re-send
     loop, repair counters, and the byte overhead repair costs — the
-    simulator wall time is the row's primary number."""
+    simulator wall time is the row's primary number. Pure-dissemination
+    specs (`data.kind="none"`); repair on/off is one component slot."""
     from benchmarks.common import row
-    from repro.fl.scheduler import AsyncConfig, simulate_async
-    from repro.fl.topology import make_topology
-    from repro.p2p import (AntiEntropyRepair, GossipConfig, GossipProtocol,
-                           GossipTransport, RepairConfig, TransportConfig,
-                           prediction_matrix_bytes)
+    from repro.sim import (ComponentSpec, DataSpec, Experiment,
+                           ExperimentSpec, NetworkSpec, ScheduleSpec,
+                           SelectionSpec)
 
     V, C, MPC, DROP = 128, 8, 2, 0.1
     for n in (16, 64):
         covs, nets, dt = {}, {}, {}
         for with_repair in (False, True):
-            nb = make_topology("ring", n, seed=0)
-            gossip = GossipProtocol(GossipConfig(mode="push", seed=0), nb)
-            transport = GossipTransport(
-                TransportConfig(base_latency=0.05, drop_prob=DROP,
-                                bandwidth=50e6, inbox_capacity=64, seed=0),
-                n, lambda s, d, k: prediction_matrix_bytes(V, C))
-            repair = AntiEntropyRepair(
-                RepairConfig(max_rounds=60, max_attempts=8, seed=0),
-                gossip) if with_repair else None
-            acfg = AsyncConfig(n_clients=n, models_per_client=MPC, seed=0)
+            spec = ExperimentSpec(
+                data=DataSpec(kind="none", n_clients=n, n_classes=C,
+                              n_val=V, models_per_client=MPC),
+                selection=SelectionSpec(enabled=False),
+                network=NetworkSpec(
+                    topology="ring",
+                    transport=ComponentSpec("gossip", {
+                        "base_latency": 0.05, "drop_prob": DROP,
+                        "bandwidth": 50e6, "inbox_capacity": 64}),
+                    gossip="push",
+                    repair=(ComponentSpec("anti_entropy",
+                                          {"max_rounds": 60,
+                                           "max_attempts": 8})
+                            if with_repair else None)),
+                schedule=ScheduleSpec(
+                    mode="async",
+                    train_cost=ComponentSpec(
+                        "affine", {"base": 1.0, "slope": 0.2})),
+                seed=0)
             t0 = time.perf_counter()
-            trace = simulate_async(acfg, nb,
-                                   train_cost=lambda c, m: 1.0 + 0.2 * m,
-                                   transport=transport, gossip=gossip,
-                                   repair=repair)
+            res = Experiment.from_spec(spec).run()
             dt[with_repair] = time.perf_counter() - t0
-            finals = [s[-1][1] if s else 0
-                      for s in trace.bench_sizes.values()]
-            covs[with_repair] = sum(finals) / (n * n * MPC)
-            nets[with_repair] = trace.net
+            covs[with_repair] = res.coverage
+            nets[with_repair] = res.net
         rs = nets[True]["repair"]
         byte_x = (nets[True]["transport"]["bytes_sent"]
                   / max(nets[False]["transport"]["bytes_sent"], 1))

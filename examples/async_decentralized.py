@@ -1,55 +1,51 @@
 """Asynchronous decentralized FedPAE: heterogeneous client speeds, gossip
 latency, ensemble re-selection on model arrival (virtual clock).
 
-This drives the UNIFIED engine (core/engine.py): every `recv` event
-incrementally materializes the receiving client's prediction store, and
-every debounced `select` tick re-runs REAL batched NSGA-II selection for
-all ready clients in one vmapped call — producing per-client validation
-accuracy over virtual time, not just bench-size traces.
+The whole scenario is one declarative `ExperimentSpec` with
+`schedule.mode="async"`: the spec's schedule section carries the speed
+heterogeneity and the train-cost model (a tagged registry component),
+and `Experiment.run()` drives the UNIFIED engine (core/engine.py) —
+every `recv` event incrementally materializes the receiving client's
+prediction store, and every debounced `select` tick re-runs REAL batched
+NSGA-II selection for all ready clients in one vmapped call — producing
+per-client validation accuracy over virtual time, not just bench sizes.
 
     PYTHONPATH=src python examples/async_decentralized.py
 """
 import numpy as np
 
-from repro.core.fedpae import FedPAEConfig, run_fedpae_async, train_all_clients
-from repro.core.nsga2 import NSGAConfig
-from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
-from repro.fl.client import ClientData
-from repro.fl.scheduler import AsyncConfig
+from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
+                       ScheduleSpec, SelectionSpec, TrainSpec)
 
 
 def main():
     n_clients = 5
-    families = ("cnn4", "vgg")
-    ds = make_synthetic_images(2500, 8, size=10, seed=0)
-    parts = dirichlet_partition(ds.y, n_clients, alpha=0.1, seed=0)
-    datasets = []
-    for ix in parts:
-        tr, va, te = split_train_val_test(ix, seed=1)
-        datasets.append(ClientData(ds.x[tr], ds.y[tr], ds.x[va], ds.y[va],
-                                   ds.x[te], ds.y[te]))
-    cfg = FedPAEConfig(families=families, ensemble_k=3,
-                       nsga=NSGAConfig(pop_size=32, generations=15, k=3),
-                       max_epochs=8, patience=3, width=12)
-    models, ccfg = train_all_clients(datasets, cfg, 8)
-
-    acfg = AsyncConfig(n_clients=n_clients, models_per_client=len(families),
-                       speed_lognorm_sigma=0.8, seed=0)
-    res = run_fedpae_async(datasets, 8, cfg, acfg=acfg,
-                           models=models, ccfg=ccfg,
-                           train_cost=lambda c, m: 1.0 + 0.3 * m)
+    spec = ExperimentSpec(
+        data=DataSpec(kind="synthetic_images", n_clients=n_clients,
+                      n_classes=8, n_samples=2500, image_size=10,
+                      alpha=0.1),
+        train=TrainSpec(families=("cnn4", "vgg"), max_epochs=8,
+                        patience=3, width=12),
+        selection=SelectionSpec(pop_size=32, generations=15, k=3,
+                                ensemble_k=3),
+        schedule=ScheduleSpec(
+            mode="async", speed_lognorm_sigma=0.8,
+            train_cost=ComponentSpec("affine",
+                                     {"base": 1.0, "slope": 0.3})),
+        seed=0)
+    res = Experiment.from_spec(spec).run()
 
     print("virtual-time ensemble quality per client (t, val_acc):")
     for c in range(n_clients):
         series = " -> ".join(f"({t:.2f}, {a:.3f})"
-                             for t, a in res.trace.selections[c])
+                             for t, a in res.selections[c])
         print(f"  client {c}: {series}")
     print(f"\nfinal test accuracy per client: "
           f"{np.round(res.test_acc, 3).tolist()} "
           f"(mean {res.test_acc.mean():.3f})")
     # asynchrony: quality is non-decreasing as more peers arrive
     for c in range(n_clients):
-        accs = [a for _, a in res.trace.selections[c]]
+        accs = [a for _, a in res.selections[c]]
         if len(accs) >= 2:
             assert accs[-1] >= accs[0] - 0.05, "quality degraded over time"
     print("\nOK: ensemble quality improves (or holds) as peer models arrive, "

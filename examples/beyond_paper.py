@@ -12,48 +12,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dynamic import des_accuracy
-from repro.core.fedpae import FedPAEConfig, run_fedpae, train_all_clients
-from repro.core.nsga2 import NSGAConfig
-from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
-from repro.fl.client import ClientData, accuracy
 from repro.fl.clustering import ClusterState, clustering_savings
-from repro.fl.topology import make_topology
+from repro.sim import (DataSpec, Experiment, ExperimentSpec, ScheduleSpec,
+                       SelectionSpec, TrainSpec)
 
 
 def main():
     n_clients, n_classes = 6, 8
-    ds = make_synthetic_images(3000, n_classes, size=10, seed=0)
-    parts = dirichlet_partition(ds.y, n_clients, alpha=0.1, seed=0)
-    datasets = []
-    for ix in parts:
-        tr, va, te = split_train_val_test(ix, seed=1)
-        datasets.append(ClientData(ds.x[tr], ds.y[tr], ds.x[va], ds.y[va],
-                                   ds.x[te], ds.y[te]))
-    cfg = FedPAEConfig(families=("cnn4", "vgg", "resnet"), ensemble_k=3,
-                       nsga=NSGAConfig(pop_size=32, generations=20, k=3),
-                       max_epochs=10, patience=4, width=12)
-    res = run_fedpae(datasets, n_classes, cfg)
+    ensemble_k = 3
+    spec = ExperimentSpec(
+        data=DataSpec(kind="synthetic_images", n_clients=n_clients,
+                      n_classes=n_classes, n_samples=3000, image_size=10,
+                      alpha=0.1),
+        train=TrainSpec(families=("cnn4", "vgg", "resnet"),
+                        max_epochs=10, patience=4, width=12),
+        selection=SelectionSpec(pop_size=32, generations=20, k=3,
+                                ensemble_k=ensemble_k),
+        schedule=ScheduleSpec(mode="sync"),
+        seed=0)
+    exp = Experiment.from_spec(spec)
+    datasets = exp.build().datasets
+    res = exp.run()
     print(f"FedPAE (full gossip): {res.test_acc.mean():.3f}")
 
     # --- 1. clustered gossip from selection history ---------------------
     st = ClusterState.init(n_clients)
     for c, chrom in enumerate(res.chromosomes):
-        owners = res.benches[c].owners[chrom > 0.5]
+        owners = res.stores[c].owners[chrom > 0.5]
         st.update(c, owners.tolist())
-    sav = clustering_savings(st, models_per_client=len(cfg.families))
+    sav = clustering_savings(st,
+                             models_per_client=len(spec.train.families))
     print(f"clustered gossip: {sav:.0%} of exchange volume saved "
           f"(paper §VI proposal)")
 
     # --- 2. dynamic per-sample selection ---------------------------------
     des, static = [], []
     for c, data in enumerate(datasets):
-        bench = res.benches[c]
+        bench = res.stores[c]
         pv = bench.val_predictions(data.x_va)
         pt = bench.predictions(data.x_te)
         d = float(des_accuracy(jnp.asarray(data.x_te), jnp.asarray(data.y_te),
                                jnp.asarray(data.x_va), jnp.asarray(data.y_va),
                                jnp.asarray(pv), jnp.asarray(pt),
-                               K=11, k=cfg.ensemble_k))
+                               K=11, k=ensemble_k))
         des.append(d)
         static.append(res.test_acc[c])
     print(f"dynamic selection (DES): {np.mean(des):.3f} vs "

@@ -2,11 +2,18 @@
 
 What the ideal-link simulator hand-waved, this example simulates
 (DESIGN.md §6): a small-world overlay, per-edge latency + bandwidth with
-10% message drops and bounded inboxes (p2p.transport), epidemic push
-gossip with version-vector dedupe (p2p.gossip), lognormal availability
-with permanent dropouts (p2p.churn), and capacity-bounded STREAMING
-prediction stores whose contribution-aware eviction keeps each client's
-bench at 16 slots while ~128 models churn through the network.
+10% message drops and bounded inboxes, epidemic push gossip with
+version-vector dedupe, lognormal availability with permanent dropouts,
+and capacity-bounded STREAMING prediction stores whose contribution-aware
+eviction keeps each client's bench at 16 slots while ~128 models churn
+through the network.
+
+Each configuration is ONE declarative `ExperimentSpec` (DESIGN.md §9):
+the p2p stack is four tagged component configs (transport / gossip /
+churn — repair unused here) resolved by name through the sim registry,
+and the trainingless world is `data.kind="prediction_world"` — per-client
+labels plus quality-parameterized prediction matrices, local models
+better than remote on average, no CNN training needed.
 
 It reports the two claims the subsystem exists to quantify:
   1. bounded stores at capacity 16 stay within 2 points of unbounded
@@ -22,14 +29,8 @@ import argparse
 
 import numpy as np
 
-from repro.core.bench import BenchEntry, PredictionStore, StreamingPredictionStore
-from repro.core.engine import SelectionEngine
-from repro.core.nsga2 import NSGAConfig
-from repro.fl.scheduler import AsyncConfig, simulate_async
-from repro.fl.topology import make_topology
-from repro.p2p import (ChurnConfig, ChurnSchedule, GossipConfig,
-                       GossipProtocol, GossipTransport, TransportConfig,
-                       checkpoint_bytes, prediction_matrix_bytes)
+from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
+                       NetworkSpec, ScheduleSpec, SelectionSpec)
 
 V, C = 128, 8
 # Checkpoint-exchange baseline: parameter count of the paper's smallest
@@ -37,80 +38,34 @@ V, C = 128, 8
 CKPT_PARAMS = 250_000
 
 
-def build_world(n_clients, mpc, seed):
-    """Synthetic network: per-client labels and per-(client, model)
-    quality-parameterized prediction matrices — local models better than
-    remote on average, no CNN training needed."""
-    rng = np.random.default_rng(seed)
-    labels = {c: rng.integers(0, C, V) for c in range(n_clients)}
-    mats = {}
-    for c in range(n_clients):
-        for owner in range(n_clients):
-            for m in range(mpc):
-                q = rng.uniform(0.55, 0.9) if owner == c \
-                    else rng.uniform(0.2, 0.85)
-                correct = rng.random(V) < q
-                pred = np.where(correct, labels[c],
-                                (labels[c] + 1 +
-                                 rng.integers(0, C - 1, V)) % C)
-                out = np.full((V, C), 0.05, np.float32)
-                out[np.arange(V), pred] = 0.8
-                mats[(c, owner * mpc + m)] = out / out.sum(1, keepdims=True)
-    return labels, mats
-
-
-def run_once(n, mpc, capacity, labels, mats, seed=0, drop=0.1,
-             size_mode="prediction", nsga=None):
-    """One full gossip+churn simulation; returns (trace, engine, stores,
-    transport, gossip, churn, curve) where curve = [(bytes_sent, acc)]."""
-    unbounded = capacity >= n * mpc
-    stores = [
-        (PredictionStore if unbounded else StreamingPredictionStore)(
-            c, capacity, np.zeros((V, 2), np.float32), labels[c], C)
-        for c in range(n)]
-    nsga = nsga or NSGAConfig(pop_size=24, generations=8, k=5, seed=seed)
-    engine = SelectionEngine(stores, nsga, ensemble_k=nsga.k, seed=seed)
-    nb = make_topology("small_world", n, k=4, seed=seed)
-    churn = ChurnSchedule(
-        ChurnConfig(availability_beta=0.1, leave_prob=0.05, seed=seed), n)
-    gossip = GossipProtocol(GossipConfig(mode="push", seed=seed), nb,
-                            churn=churn)
-    if size_mode == "prediction":
-        size_fn = lambda s, d, k: prediction_matrix_bytes(V, C)  # noqa: E731
-    else:
-        size_fn = lambda s, d, k: checkpoint_bytes(CKPT_PARAMS)  # noqa: E731
-    transport = GossipTransport(
-        TransportConfig(base_latency=0.05, jitter=1.0, bandwidth=50e6,
-                        drop_prob=drop, inbox_capacity=64, seed=seed),
-        n, size_fn)
-
-    latest = {}
-    curve = []
-
-    def on_add(c, key, t):
-        owner, m = key
-        gid = owner * mpc + m
-        stores[c].add(
-            BenchEntry(model_id=gid, owner=owner, family=f"f{m}",
-                       predict=lambda x: np.full((len(x), C), 1.0 / C,
-                                                 np.float32)),
-            preds=mats[(c, gid)], t=t)
-
-    def on_select_batch(clients, bench, t):
-        fresh = engine.select(clients, t=t)
-        out = {c: float(r["val_accuracy"]) for c, r in fresh.items()}
-        latest.update(out)
-        if latest:
-            curve.append((transport.stats.bytes_sent,
-                          float(np.mean(list(latest.values())))))
-        return out
-
-    acfg = AsyncConfig(n_clients=n, models_per_client=mpc,
-                       select_debounce=0.5, seed=seed)
-    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
-                           on_add=on_add, on_select_batch=on_select_batch,
-                           transport=transport, gossip=gossip, churn=churn)
-    return trace, engine, stores, transport, gossip, churn, curve
+def make_spec(n, mpc, capacity, *, seed=0, world_seed=17, drop=0.1,
+              size_mode="prediction", pop=24, gens=8, k=5):
+    """One full gossip+churn scenario as a serializable spec."""
+    # dict form (not a ComponentSpec instance) so the spec's
+    # from_dict(to_dict()) round-trip identity holds for this spec too
+    sizer = ({"name": "prediction_matrix",
+              "params": {"n_val": V, "n_classes": C}}
+             if size_mode == "prediction"
+             else {"name": "checkpoint",
+                   "params": {"n_params": CKPT_PARAMS}})
+    return ExperimentSpec(
+        data=DataSpec(kind="prediction_world", n_clients=n, n_classes=C,
+                      n_val=V, models_per_client=mpc, seed=world_seed),
+        selection=SelectionSpec(pop_size=pop, generations=gens, k=k,
+                                store_capacity=capacity),
+        network=NetworkSpec(
+            topology="small_world", topology_k=4,
+            transport=ComponentSpec("gossip", {
+                "base_latency": 0.05, "jitter": 1.0, "bandwidth": 50e6,
+                "drop_prob": drop, "inbox_capacity": 64, "sizer": sizer}),
+            gossip="push",
+            churn=ComponentSpec("lognormal", {"availability_beta": 0.1,
+                                              "leave_prob": 0.05})),
+        schedule=ScheduleSpec(
+            mode="async", select_debounce=0.5,
+            train_cost=ComponentSpec("affine",
+                                     {"base": 1.0, "slope": 0.2})),
+        seed=seed)
 
 
 def main():
@@ -119,33 +74,30 @@ def main():
                     help="fast CI subset: 16 clients, lighter GA")
     args = ap.parse_args()
     n, mpc, capacity = (16, 2, 8) if args.smoke else (64, 2, 16)
-    nsga = (NSGAConfig(pop_size=16, generations=5, k=3, seed=0)
-            if args.smoke else None)
+    ga = dict(pop=16, gens=5, k=3) if args.smoke else {}
     print(f"world: {n} clients x {mpc} models, bounded capacity {capacity}, "
           f"small-world overlay, 10% drops, lognormal churn")
-    labels, mats = build_world(n, mpc, seed=17)
 
     runs = {}
     for name, cap in (("bounded", capacity), ("unbounded", n * mpc)):
-        trace, engine, stores, transport, gossip, churn, curve = run_once(
-            n, mpc, cap, labels, mats, nsga=nsga)
-        evictions = sum(getattr(s, "evictions", 0) for s in stores)
-        finals = [trace.selections[c][-1][1] for c in range(n)
-                  if trace.selections[c]]
-        runs[name] = dict(acc=float(np.mean(finals)), curve=curve,
-                          bytes=transport.stats.bytes_sent,
-                          evictions=evictions, trace=trace)
+        res = Experiment.from_spec(make_spec(n, mpc, cap, **ga)).run()
+        evictions = sum(getattr(s, "evictions", 0) for s in res.stores)
+        finals = [res.selections[c][-1][1] for c in range(n)
+                  if res.selections[c]]
+        tstats = res.net["transport"]
+        runs[name] = dict(acc=float(np.mean(finals)), curve=res.curve,
+                          bytes=tstats["bytes_sent"], evictions=evictions)
         print(f"\n[{name} cap={cap}] final mean val-acc "
               f"{runs[name]['acc']:.3f} over {len(finals)} selecting "
-              f"clients | bytes-on-wire {transport.stats.bytes_sent/1e6:.1f}"
-              f" MB (+{transport.stats.bytes_rejected/1e6:.1f} MB "
+              f"clients | bytes-on-wire {tstats['bytes_sent']/1e6:.1f}"
+              f" MB (+{tstats['bytes_rejected']/1e6:.1f} MB "
               f"inbox-rejected, not on wire) | evictions {evictions} | "
               f"dropped link/inbox/offline "
-              f"{transport.stats.n_dropped_link}/"
-              f"{transport.stats.n_dropped_inbox}/"
-              f"{trace.net['lost_offline']} | "
-              f"gossip dedup {gossip.stats.n_dedup} "
-              f"suppressed {gossip.stats.n_suppressed}")
+              f"{tstats['n_dropped_link']}/"
+              f"{tstats['n_dropped_inbox']}/"
+              f"{res.net['lost_offline']} | "
+              f"gossip dedup {res.net['gossip']['n_dedup']} "
+              f"suppressed {res.net['gossip']['n_suppressed']}")
 
     # -- claim 1: bounded within 2 points of unbounded ------------------
     gap = runs["unbounded"]["acc"] - runs["bounded"]["acc"]
@@ -154,11 +106,10 @@ def main():
     assert gap <= 0.02, f"bounded store lost {gap:.3f} val-acc"
 
     # -- claim 2: prediction-matrix exchange >= 10x cheaper -------------
-    *_, transport_ckpt, _, _, _ = run_once(n, mpc, capacity, labels, mats,
-                                           size_mode="checkpoint",
-                                           nsga=nsga)
+    res_ckpt = Experiment.from_spec(
+        make_spec(n, mpc, capacity, size_mode="checkpoint", **ga)).run()
     pred_b = runs["bounded"]["bytes"]
-    ckpt_b = transport_ckpt.stats.bytes_sent
+    ckpt_b = res_ckpt.net["transport"]["bytes_sent"]
     print(f"bytes-on-wire: prediction-matrix {pred_b/1e6:.1f} MB vs "
           f"checkpoint {ckpt_b/1e6:.1f} MB -> {ckpt_b/max(pred_b,1):.0f}x")
     assert ckpt_b >= 10 * pred_b

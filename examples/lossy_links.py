@@ -5,7 +5,15 @@ store to EVENTUALLY hold every peer's model — but an epidemic push over
 lossy links stalls short: once a forward is dropped, version-vector
 dedupe guarantees nobody ever re-sends it (fl/scheduler.py only pushes
 on trained/recv events). This example measures that gap and the repair
-subsystem (p2p.repair, DESIGN.md §8) that closes it:
+subsystem (p2p.repair, DESIGN.md §8) that closes it.
+
+Every run is one declarative `ExperimentSpec` with
+`data.kind="none"` (pure dissemination, no stores or selection): the
+ring topology, the lossy transport, the push gossip, and — when enabled
+— the anti-entropy repair loop are tagged registry components, so the
+with/without-repair comparison is literally one spec field. The same
+scenario ships as `examples/specs/lossy_ring.json` for the
+`python -m repro.sim.run` CLI (the spec-smoke CI job).
 
   - ring topology (the hardest overlay: exactly two paths per model),
     `drop_prob` in {0%, 10%, 30%}, push gossip, with and without
@@ -26,46 +34,46 @@ import json
 
 import numpy as np
 
-from repro.fl.scheduler import AsyncConfig, simulate_async
-from repro.fl.topology import make_topology
-from repro.p2p import (AntiEntropyRepair, GossipConfig, GossipProtocol,
-                       GossipTransport, RepairConfig, TransportConfig,
-                       prediction_matrix_bytes)
+from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
+                       NetworkSpec, ScheduleSpec, SelectionSpec)
 
 V, C = 128, 8
 
 
+def make_spec(n, mpc, drop, with_repair, seed=0) -> ExperimentSpec:
+    repair = ComponentSpec("anti_entropy", {
+        "interval": 1.0, "start": 1.0, "max_rounds": 60,
+        "quiesce_after": 2, "max_attempts": 8,
+        "max_resends_per_digest": 8}) if with_repair else None
+    return ExperimentSpec(
+        data=DataSpec(kind="none", n_clients=n, n_classes=C, n_val=V,
+                      models_per_client=mpc),
+        selection=SelectionSpec(enabled=False),
+        network=NetworkSpec(
+            topology="ring",
+            transport=ComponentSpec("gossip", {
+                "base_latency": 0.05, "jitter": 1.0, "bandwidth": 50e6,
+                "drop_prob": drop, "inbox_capacity": 64}),
+            gossip="push", repair=repair),
+        schedule=ScheduleSpec(
+            mode="async",
+            train_cost=ComponentSpec("affine",
+                                     {"base": 1.0, "slope": 0.2})),
+        seed=seed)
+
+
 def run_once(n, mpc, drop, with_repair, seed=0):
-    """One dissemination run; returns (trace, transport, repair, stats)
-    where stats has coverage / t_full / bytes split by message class."""
-    nb = make_topology("ring", n, seed=seed)
-    gossip = GossipProtocol(GossipConfig(mode="push", seed=seed), nb)
-    transport = GossipTransport(
-        TransportConfig(base_latency=0.05, jitter=1.0, bandwidth=50e6,
-                        drop_prob=drop, inbox_capacity=64, seed=seed),
-        n, lambda s, d, k: prediction_matrix_bytes(V, C))
-    repair = None
-    if with_repair:
-        repair = AntiEntropyRepair(
-            RepairConfig(interval=1.0, start=1.0, max_rounds=60,
-                         quiesce_after=2, max_attempts=8,
-                         max_resends_per_digest=8, seed=seed), gossip)
-    acfg = AsyncConfig(n_clients=n, models_per_client=mpc, seed=seed)
-    trace = simulate_async(acfg, nb, train_cost=lambda c, m: 1.0 + 0.2 * m,
-                           transport=transport, gossip=gossip,
-                           repair=repair)
-    total = n * mpc
-    finals = [series[-1][1] if series else 0
-              for series in trace.bench_sizes.values()]
-    coverage = sum(finals) / (n * total)
-    t_full = max(series[-1][0] for series in trace.bench_sizes.values()) \
-        if coverage == 1.0 else float("nan")
-    stats = dict(coverage=coverage, t_full=t_full,
-                 bytes_sent=transport.stats.bytes_sent,
-                 bytes_rejected=transport.stats.bytes_rejected,
-                 dropped=transport.stats.n_dropped_link,
-                 repair=repair.stats.as_dict() if repair else None)
-    return trace, transport, repair, stats
+    """One dissemination run; returns (result, stats) where stats has
+    coverage / t_full / bytes split by message class."""
+    res = Experiment.from_spec(make_spec(n, mpc, drop, with_repair,
+                                         seed)).run()
+    tstats = res.net["transport"]
+    stats = dict(coverage=res.coverage, t_full=res.t_full,
+                 bytes_sent=tstats["bytes_sent"],
+                 bytes_rejected=tstats["bytes_rejected"],
+                 dropped=tstats["n_dropped_link"],
+                 repair=res.net.get("repair"))
+    return res, stats
 
 
 def main():
@@ -85,8 +93,7 @@ def main():
     rows, results = [], {}
     for drop in (0.0, 0.1, 0.3):
         for with_repair in (False, True):
-            trace, transport, repair, st = run_once(n, mpc, drop,
-                                                    with_repair)
+            _, st = run_once(n, mpc, drop, with_repair)
             results[(drop, with_repair)] = st
             rs = st["repair"] or {}
             tag = "on" if with_repair else "off"
@@ -121,10 +128,11 @@ def main():
           f"no-repair wire bytes (digests + re-sends)")
 
     # -- determinism: retry streams are order-independent ---------------
-    t1, tr1, _, _ = run_once(n, mpc, 0.1, True)
-    t2, tr2, _, _ = run_once(n, mpc, 0.1, True)
-    assert t1.events == t2.events and t1.net == t2.net \
-        and tr1.log == tr2.log, "trace not bit-identical across runs"
+    r1, _ = run_once(n, mpc, 0.1, True)
+    r2, _ = run_once(n, mpc, 0.1, True)
+    assert r1.trace.events == r2.trace.events and r1.net == r2.net \
+        and r1.transport.log == r2.transport.log, \
+        "trace not bit-identical across runs"
     print("determinism: repair trace is bit-identical across two runs "
           "with the same seed")
 

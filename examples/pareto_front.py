@@ -1,15 +1,18 @@
 """Paper Fig. 3: the strength/diversity Pareto front for one client.
 
+Uses `Experiment.build()` — the spec layer's construction-without-run
+path: the declarative spec materializes datasets, trained models, and
+filled prediction stores, and this script then drives a single client's
+NSGA-II selection itself to inspect the full population.
+
     PYTHONPATH=src python examples/pareto_front.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.nsga2 import NSGAConfig
 from repro.core.selection import select_ensemble
-from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
-from repro.core.fedpae import FedPAEConfig, train_all_clients, build_stores
-from repro.fl.client import ClientData
+from repro.sim import (DataSpec, Experiment, ExperimentSpec, ScheduleSpec,
+                       SelectionSpec, TrainSpec)
 
 
 def ascii_scatter(xs, ys, sel_idx, width=60, height=18):
@@ -28,22 +31,21 @@ def ascii_scatter(xs, ys, sel_idx, width=60, height=18):
 
 
 def main():
-    ds = make_synthetic_images(2000, 8, size=10, seed=0)
-    parts = dirichlet_partition(ds.y, 4, alpha=0.3, seed=0)
-    datasets = []
-    for ix in parts:
-        tr, va, te = split_train_val_test(ix, seed=1)
-        datasets.append(ClientData(ds.x[tr], ds.y[tr], ds.x[va], ds.y[va],
-                                   ds.x[te], ds.y[te]))
-    cfg = FedPAEConfig(families=("cnn4", "vgg"), ensemble_k=3,
-                       nsga=NSGAConfig(pop_size=64, generations=40, k=3),
-                       max_epochs=8, patience=3, width=12)
-    models, ccfg = train_all_clients(datasets, cfg, 8)
-    stores = build_stores(datasets, models, ccfg, cfg)
+    spec = ExperimentSpec(
+        data=DataSpec(kind="synthetic_images", n_clients=4, n_classes=8,
+                      n_samples=2000, image_size=10, alpha=0.3),
+        train=TrainSpec(families=("cnn4", "vgg"), max_epochs=8,
+                        patience=3, width=12),
+        selection=SelectionSpec(pop_size=64, generations=40, k=3,
+                                ensemble_k=3),
+        schedule=ScheduleSpec(mode="sync"),
+        seed=0)
+    exp = Experiment.from_spec(spec).build()  # train + exchange, no run
     c = 0
     # the store already holds the padded (M, V_pad, C) device-ready tensor
-    pv, yv, mask = stores[c].padded()
-    sel = select_ensemble(jnp.asarray(pv), jnp.asarray(yv), cfg.nsga,
+    pv, yv, mask = exp.stores[c].padded()
+    sel = select_ensemble(jnp.asarray(pv), jnp.asarray(yv),
+                          exp.engine.nsga,
                           model_mask=jnp.asarray(mask, jnp.float32))
     objs = np.asarray(sel["objs"])
     pareto = np.asarray(sel["pareto_mask"])

@@ -1,32 +1,38 @@
 """Quickstart: FedPAE on a 5-client non-IID network in ~2 minutes on CPU.
 
+One declarative `ExperimentSpec` (repro.sim) describes the whole run —
+data partition, heterogeneous model families, NSGA-II selection shape —
+and `Experiment.from_spec(spec).run()` executes it and returns a
+structured `RunResult`. The spec serializes (`spec.to_json()`), so this
+exact experiment can be saved, swept, or re-run byte-for-byte from a
+file with `python -m repro.sim.run --spec <file>`.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.fedpae import FedPAEConfig, run_fedpae, run_local_ensemble
-from repro.core.nsga2 import NSGAConfig
-from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
-from repro.fl.client import ClientData
+from repro.sim import (DataSpec, Experiment, ExperimentSpec, ScheduleSpec,
+                       SelectionSpec, TrainSpec)
 
 
 def main():
-    # 1. non-IID data: 5 clients, Dirichlet(0.1) label skew
-    ds = make_synthetic_images(3000, 10, size=10, seed=0)
-    parts = dirichlet_partition(ds.y, 5, alpha=0.1, seed=0)
-    datasets = []
-    for ix in parts:
-        tr, va, te = split_train_val_test(ix, seed=1)
-        datasets.append(ClientData(ds.x[tr], ds.y[tr], ds.x[va], ds.y[va],
-                                   ds.x[te], ds.y[te]))
-    print("client train sizes:", [len(d.x_tr) for d in datasets])
+    # one spec = the whole scenario: 5 clients, Dirichlet(0.1) label
+    # skew, three heterogeneous families per client, NSGA-II selection
+    spec = ExperimentSpec(
+        data=DataSpec(kind="synthetic_images", n_clients=5, n_classes=10,
+                      n_samples=3000, image_size=10, alpha=0.1),
+        train=TrainSpec(families=("cnn4", "vgg", "resnet"),
+                        max_epochs=12, patience=4, width=12),
+        selection=SelectionSpec(pop_size=48, generations=30, k=3,
+                                ensemble_k=3),
+        schedule=ScheduleSpec(mode="sync"),
+        seed=0)
+    exp = Experiment.from_spec(spec)
+    print("client train sizes:",
+          [len(d.x_tr) for d in exp.build().datasets])
 
-    # 2. each client trains heterogeneous models; p2p exchange; NSGA-II select
-    cfg = FedPAEConfig(families=("cnn4", "vgg", "resnet"), ensemble_k=3,
-                       nsga=NSGAConfig(pop_size=48, generations=30, k=3),
-                       max_epochs=12, patience=4, width=12)
-    local_acc, models, ccfg = run_local_ensemble(datasets, 10, cfg)
-    res = run_fedpae(datasets, 10, cfg, models=models, ccfg=ccfg)
+    local_acc = exp.local_ensemble()  # paper's local-only baseline
+    res = exp.run()                   # trains, exchanges, selects, serves
 
     print(f"\nlocal-ensemble accuracy : {local_acc.mean():.3f}")
     print(f"FedPAE accuracy         : {res.test_acc.mean():.3f}")

@@ -19,10 +19,18 @@ Two drivers share the same `SelectionEngine`:
                       incrementally and answers debounced select events
                       with batched re-selection, producing per-client
                       validation-accuracy-over-virtual-time curves.
+
+.. deprecated:: both drivers are now thin compatibility shims over the
+   declarative spec layer (DESIGN.md §9): they lift their kwargs into an
+   `repro.sim.ExperimentSpec` and execute through `repro.sim.Experiment`,
+   so a shim run and a pure-spec run of the same scenario produce
+   bit-identical traces (tests/test_spec.py). New code should construct
+   an `ExperimentSpec` directly — it serializes, sweeps, and composes.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -33,7 +41,7 @@ from repro.core.engine import SelectionEngine
 from repro.core.nsga2 import NSGAConfig
 from repro.fl.client import (ClientData, accuracy, predict_probs,
                              predict_probs_batched, train_local_model)
-from repro.fl.scheduler import AsyncConfig, AsyncTrace, simulate_async
+from repro.fl.scheduler import AsyncConfig, AsyncTrace
 from repro.fl.topology import make_topology
 from repro.models.cnn import CNNConfig, n_params
 
@@ -44,7 +52,13 @@ DEFAULT_FAMILIES = ("cnn4", "vgg", "resnet", "densenet", "inception")
 class FedPAEConfig:
     families: tuple = DEFAULT_FAMILIES
     ensemble_k: int = 5
-    nsga: NSGAConfig = NSGAConfig(pop_size=100, generations=100, k=5)
+    nsga: NSGAConfig = dataclasses.field(
+        default_factory=lambda: NSGAConfig(pop_size=100, generations=100,
+                                           k=5))
+    # ^ default_factory, not a shared default instance: one config's
+    #   default must never alias another's (NamedTuple happens to be
+    #   immutable today, but a mutable NSGAConfig would silently couple
+    #   every FedPAEConfig in the process)
     topology: str = "full"
     lr: float = 0.05
     batch: int = 32
@@ -142,35 +156,32 @@ def build_stores(datasets, models, ccfg, cfg: FedPAEConfig):
     return stores
 
 
-# Backwards-compatible name for the pre-store API.
-build_benches = build_stores
+def build_benches(*args, **kwargs):
+    """Deprecated pre-store name for `build_stores`."""
+    warnings.warn(
+        "repro.core.fedpae.build_benches is deprecated; "
+        "call build_stores instead", DeprecationWarning, stacklevel=2)
+    return build_stores(*args, **kwargs)
 
 
 def run_fedpae(datasets, n_classes: int, cfg: FedPAEConfig,
                models=None, ccfg=None) -> FedPAEResult:
-    if models is None:
-        models, ccfg = train_all_clients(datasets, cfg, n_classes)
-    stores = build_stores(datasets, models, ccfg, cfg)
-    engine = SelectionEngine(stores, cfg.nsga, use_kernel=cfg.use_kernel,
-                             seed=cfg.seed, ensemble_k=cfg.ensemble_k,
-                             device_resident=cfg.device_resident)
-    engine.select()  # one vmapped NSGA-II run for ALL clients
+    """Synchronous driver — COMPATIBILITY SHIM over the spec layer.
 
-    accs, local_fracs, chroms, member_accs = [], [], [], []
-    for c, data in enumerate(datasets):
-        vote, chrom = engine.serve(c, data.x_te)
-        mask = chrom > 0.5
-        accs.append(accuracy(vote, data.y_te))
-        local_fracs.append(float((mask & stores[c].is_local()).sum()
-                                 / max(1, mask.sum())))
-        chroms.append(chrom)
-        res = engine.results.get(c)  # absent when the store couldn't fill
-        member_accs.append(np.asarray(res["member_acc"]) if res is not None
-                           else np.full(stores[c].capacity, np.nan))
+    .. deprecated:: construct an `repro.sim.ExperimentSpec` and call
+       `Experiment.from_spec(spec).run()` instead. This shim lifts
+       `cfg` into a spec, injects the caller's datasets/models, and runs
+       the same driver, so results are identical to the pre-spec code.
+    """
+    from repro.sim import Experiment, spec_from_fedpae
+    spec = spec_from_fedpae(cfg, n_clients=len(datasets),
+                            n_classes=n_classes, mode="sync")
+    r = Experiment(spec, datasets=datasets, models=models,
+                   ccfg=ccfg).run()
     return FedPAEResult(
-        test_acc=np.array(accs), local_frac=np.array(local_fracs),
-        chromosomes=chroms, member_val_acc=member_accs,
-        benches=stores, models=models)
+        test_acc=r.test_acc, local_frac=r.local_frac,
+        chromosomes=r.chromosomes, member_val_acc=r.member_val_acc,
+        benches=r.stores, models=r.models)
 
 
 def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
@@ -179,47 +190,39 @@ def run_fedpae_async(datasets, n_classes: int, cfg: FedPAEConfig,
                      train_cost: Optional[Callable] = None,
                      transport=None, gossip=None, churn=None,
                      repair=None) -> AsyncFedPAEResult:
-    """The unified async driver: virtual-clock simulation where arrivals
-    incrementally materialize the stores and debounced select events run
-    REAL batched re-selection through the shared engine. The optional
-    `transport`/`gossip`/`churn` p2p layers (repro.p2p) make the exchange
-    lossy, multi-hop, and churn-aware (DESIGN.md §6); `repair`
-    (p2p.AntiEntropyRepair, needs transport + gossip) adds the
-    anti-entropy digest/re-send loop that makes dissemination under loss
-    eventually complete (DESIGN.md §8)."""
-    n = len(datasets)
-    if models is None:
-        models, ccfg = train_all_clients(datasets, cfg, n_classes)
-    F = len(cfg.families)
-    if acfg is None:
-        acfg = AsyncConfig(n_clients=n, models_per_client=F, seed=cfg.seed)
-    assert acfg.n_clients == n and acfg.models_per_client == F, \
-        "async config must match the client/model grid"
-    neighbors = make_topology(cfg.topology, n, seed=cfg.seed)
-    stores = _empty_stores(datasets, cfg, n_classes)
-    engine = SelectionEngine(stores, cfg.nsga, use_kernel=cfg.use_kernel,
-                             seed=cfg.seed, ensemble_k=cfg.ensemble_k,
-                             device_resident=cfg.device_resident)
+    """The unified async driver — COMPATIBILITY SHIM over the spec layer.
 
-    def on_add(c, model_key, t):
-        owner, m = model_key
-        stores[c].add(_make_entry(owner, cfg.families[m], m, models, ccfg, F),
-                      t=t)
+    Virtual-clock simulation where arrivals incrementally materialize the
+    stores and debounced select events run REAL batched re-selection
+    through the shared engine. The optional `transport`/`gossip`/`churn`
+    p2p layers (repro.p2p) make the exchange lossy, multi-hop, and
+    churn-aware (DESIGN.md §6); `repair` (p2p.AntiEntropyRepair, needs
+    transport + gossip) adds the anti-entropy digest/re-send loop that
+    makes dissemination under loss eventually complete (DESIGN.md §8).
 
-    def on_select_batch(clients, bench_ids, t):
-        fresh = engine.select(clients, t=t)
-        return {c: float(r["val_accuracy"]) for c, r in fresh.items()}
-
-    trace = simulate_async(
-        acfg, neighbors,
-        train_cost=train_cost or (lambda c, m: 1.0 + 0.3 * m),
-        on_add=on_add, on_select_batch=on_select_batch,
-        transport=transport, gossip=gossip, churn=churn, repair=repair)
-
-    accs = [accuracy(engine.serve(c, d.x_te)[0], d.y_te)
-            for c, d in enumerate(datasets)]
-    return AsyncFedPAEResult(trace=trace, test_acc=np.array(accs),
-                             stores=stores, engine=engine)
+    .. deprecated:: construct an `repro.sim.ExperimentSpec` (network
+       components as tagged registry configs instead of six loose
+       kwargs) and call `Experiment.from_spec(spec).run()`. This shim
+       lifts its kwargs into exactly that spec and injects the caller's
+       pre-built collaborators; traces are bit-identical to both the
+       pre-spec code and the pure-spec path (tests/test_spec.py).
+    """
+    from repro.sim import Experiment, spec_from_fedpae
+    n, F = len(datasets), len(cfg.families)
+    if acfg is not None and (acfg.n_clients != n
+                             or acfg.models_per_client != F):
+        raise ValueError(
+            f"async config must match the client/model grid: acfg has "
+            f"(n_clients={acfg.n_clients}, models_per_client="
+            f"{acfg.models_per_client}) but the datasets/config imply "
+            f"(n_clients={n}, models_per_client={F})")
+    spec = spec_from_fedpae(cfg, n_clients=n, n_classes=n_classes,
+                            mode="async", acfg=acfg)
+    r = Experiment(spec, datasets=datasets, models=models, ccfg=ccfg,
+                   transport=transport, gossip=gossip, churn=churn,
+                   repair=repair, train_cost=train_cost).run()
+    return AsyncFedPAEResult(trace=r.trace, test_acc=r.test_acc,
+                             stores=r.stores, engine=r.engine)
 
 
 def run_local_ensemble(datasets, n_classes: int, cfg: FedPAEConfig,

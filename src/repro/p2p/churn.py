@@ -24,6 +24,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.p2p.params import config_from_params
+
 _CHURN_SALT = 0x5DEECE66
 
 
@@ -39,6 +41,13 @@ class ChurnConfig:
 
 class ChurnSchedule:
     """Deterministic availability/join/leave schedule for one fleet."""
+
+    @classmethod
+    def from_params(cls, params: dict, n_clients: int) -> "ChurnSchedule":
+        """Registry hook (repro.sim): build from a tagged component's
+        params dict."""
+        return cls(config_from_params(ChurnConfig, params, "churn"),
+                   n_clients)
 
     def __init__(self, cfg: ChurnConfig, n_clients: int):
         self.cfg = cfg

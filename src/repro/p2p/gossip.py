@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.p2p.churn import ChurnSchedule
+from repro.p2p.params import config_from_params
 from repro.p2p.transport import ModelKey
 
 _GOSSIP_SALT = 0x41C64E6D
@@ -66,6 +67,24 @@ class GossipStats:
 
 class GossipProtocol:
     """One fleet's gossip state machine (decides who forwards what)."""
+
+    @classmethod
+    def from_params(cls, mode: str, params: dict, neighbors,
+                    churn: Optional[ChurnSchedule] = None
+                    ) -> "GossipProtocol":
+        """Registry hook (repro.sim): the spec layer registers one name
+        per gossip mode ("push", "push_pull"), so `mode` arrives as the
+        component name and `params` carries the rest of GossipConfig. A
+        `mode` key inside params is rejected — it would let the params
+        silently contradict the component name the spec advertises."""
+        if "mode" in params:
+            raise ValueError(
+                f"gossip params must not carry 'mode' (got "
+                f"{params['mode']!r}): the mode IS the component name "
+                f"({mode!r})")
+        return cls(config_from_params(GossipConfig, {"mode": mode, **params},
+                                      f"gossip[{mode}]"), neighbors,
+                   churn=churn)
 
     def __init__(self, cfg: GossipConfig, neighbors,
                  churn: Optional[ChurnSchedule] = None):

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.p2p.churn import ChurnSchedule
 from repro.p2p.gossip import GossipProtocol
+from repro.p2p.params import config_from_params
 from repro.p2p.transport import ModelKey
 
 _REPAIR_SALT = 0x2545F491
@@ -108,6 +109,15 @@ class RepairStats:
 
 class AntiEntropyRepair:
     """One fleet's repair state machine (decides digests and re-sends)."""
+
+    @classmethod
+    def from_params(cls, params: dict, gossip: GossipProtocol,
+                    churn: Optional[ChurnSchedule] = None
+                    ) -> "AntiEntropyRepair":
+        """Registry hook (repro.sim): build from a tagged component's
+        params dict."""
+        return cls(config_from_params(RepairConfig, params, "repair"),
+                   gossip, churn=churn)
 
     def __init__(self, cfg: RepairConfig, gossip: GossipProtocol,
                  churn: Optional[ChurnSchedule] = None):

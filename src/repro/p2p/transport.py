@@ -24,6 +24,8 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.p2p.params import config_from_params
+
 ModelKey = Tuple[int, int]  # (owner client, local model index)
 
 _EDGE_SALT = 0x9E3779B9  # domain-separates edge streams from other rngs
@@ -93,6 +95,16 @@ class GossipTransport:
     in prediction-matrix bytes (default) or checkpoint bytes (the cost
     baseline). A message log (t_send, src, dst, key, outcome) supports
     the churn tests and the bytes-on-wire curves."""
+
+    @classmethod
+    def from_params(cls, params: dict, n_clients: int,
+                    size_fn: Callable[[int, int, ModelKey], int]
+                    ) -> "GossipTransport":
+        """Registry hook (repro.sim): build from a tagged component's
+        params dict — the name-addressable constructor the declarative
+        spec layer resolves."""
+        return cls(config_from_params(TransportConfig, params, "transport"),
+                   n_clients, size_fn)
 
     def __init__(self, cfg: TransportConfig, n_clients: int,
                  size_fn: Callable[[int, int, ModelKey], int]):

@@ -1,0 +1,68 @@
+"""Bridges between the legacy `FedPAEConfig` drivers and the spec layer.
+
+The legacy entry points (`repro.core.fedpae.run_fedpae` /
+`run_fedpae_async`) are thin shims: they lift their loose kwargs into an
+`ExperimentSpec` with `spec_from_fedpae` and hand any caller-constructed
+collaborators (datasets, trained models, transport/gossip/churn/repair
+objects) to `Experiment` as injected overrides. The reverse bridge
+`fedpae_config` lets the spec driver reuse the battle-tested
+`core.fedpae` helpers (`train_all_clients`, `build_stores`,
+`_empty_stores`) verbatim — which is what makes the shim and spec paths
+produce bit-identical traces (tests/test_spec.py golden-trace test).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.sim.spec import (DataSpec, ExperimentSpec, NetworkSpec,
+                            ScheduleSpec, SelectionSpec, TrainSpec)
+
+
+def spec_from_fedpae(cfg, *, n_clients: int, n_classes: int,
+                     mode: str = "sync", acfg=None) -> ExperimentSpec:
+    """Lift a legacy FedPAEConfig (+ optional AsyncConfig) into an
+    ExperimentSpec. Data is kind="external": the shim injects the
+    caller's datasets, so the spec describes everything EXCEPT the data
+    generation."""
+    sched = ScheduleSpec(mode=mode)
+    if acfg is not None:
+        sched = ScheduleSpec(
+            mode=mode, speed_lognorm_sigma=acfg.speed_lognorm_sigma,
+            link_latency=acfg.link_latency,
+            select_debounce=acfg.select_debounce, seed=acfg.seed)
+    nsga = cfg.nsga
+    return ExperimentSpec(
+        data=DataSpec(kind="external", n_clients=n_clients,
+                      n_classes=n_classes),
+        train=TrainSpec(families=tuple(cfg.families), lr=cfg.lr,
+                        batch=cfg.batch, max_epochs=cfg.max_epochs,
+                        patience=cfg.patience, width=cfg.width),
+        selection=SelectionSpec(
+            pop_size=nsga.pop_size, generations=nsga.generations,
+            k=nsga.k, p_mut=nsga.p_mut, p_cross=nsga.p_cross,
+            ensemble_k=cfg.ensemble_k, use_kernel=cfg.use_kernel,
+            device_resident=cfg.device_resident,
+            store_capacity=cfg.store_capacity),
+        network=NetworkSpec(topology=cfg.topology),
+        schedule=sched,
+        seed=cfg.seed)
+
+
+def fedpae_config(spec: ExperimentSpec):
+    """The reverse bridge: reconstruct the FedPAEConfig the core helpers
+    expect from a spec. (NSGAConfig.seed is inert on the engine paths —
+    per-client PRNG streams come from the engine seed — so inheriting
+    the experiment seed there never changes a trace.)"""
+    from repro.core.fedpae import FedPAEConfig  # lazy: fedpae shims import sim
+    sel, tr = spec.selection, spec.train
+    return FedPAEConfig(
+        families=tuple(tr.families),
+        ensemble_k=sel.ensemble_k if sel.ensemble_k is not None else sel.k,
+        nsga=sel.nsga(spec.seed),
+        topology=spec.network.topology,
+        lr=tr.lr, batch=tr.batch, max_epochs=tr.max_epochs,
+        patience=tr.patience, width=tr.width,
+        use_kernel=sel.use_kernel,
+        store_capacity=sel.store_capacity,
+        device_resident=sel.device_resident,
+        seed=spec.seed)

@@ -1,0 +1,374 @@
+"""`Experiment`: the one composable entry point for every FedPAE run.
+
+`Experiment.from_spec(spec).run()` builds the world, stores, engine, and
+p2p stack a declarative `ExperimentSpec` describes, dispatches to the
+synchronous or asynchronous driver, and returns a structured `RunResult`
+(test accuracy, val-acc curves, dissemination coverage, net counters,
+spec echo) that sweep harnesses consume directly (DESIGN.md §9).
+
+The legacy drivers ride on top: `run_fedpae` / `run_fedpae_async`
+(repro.core.fedpae) lift their kwargs into a spec and inject their
+caller-constructed collaborators through `Experiment(...)`'s keyword
+overrides — injected objects take the place of registry-built ones, and
+everything else is built from the spec. Both paths execute the same
+driver code, so a shim run and a pure-spec run of the same scenario
+produce bit-identical traces (proven in tests/test_spec.py).
+
+`build()` without `run()` materializes datasets / models / stores /
+engine for analysis scripts that drive selection themselves (e.g.
+examples/pareto_front.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.bench import BenchEntry
+from repro.core.engine import SelectionEngine
+from repro.fl.client import accuracy
+from repro.fl.scheduler import AsyncConfig, AsyncTrace, simulate_async
+from repro.sim.build import (build_client_datasets, build_network,
+                             build_prediction_world, build_world_stores)
+from repro.sim.compat import fedpae_config
+from repro.sim.spec import ExperimentSpec
+
+_IMAGE_KINDS = ("synthetic_images", "external")
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured outcome of one experiment — everything the examples,
+    benchmarks, and sweep harnesses report, plus handles to the live
+    objects (stores, engine, p2p stack) for post-hoc analysis."""
+    spec: ExperimentSpec
+    mode: str
+    test_acc: Optional[np.ndarray] = None     # (N,) final-ensemble test acc
+    local_frac: Optional[np.ndarray] = None   # sync: local-member fraction
+    chromosomes: Optional[list] = None        # sync: per-client ensembles
+    member_val_acc: Optional[list] = None     # sync: per-member val acc
+    selections: Optional[dict] = None         # async: c -> [(t, val_acc)]
+    select_batches: Optional[list] = None     # async: (t, batch_size)
+    curve: Optional[list] = None              # async: (bytes_sent, mean acc)
+    coverage: Optional[float] = None          # async: dissemination fraction
+    t_full: Optional[float] = None            # async: time to coverage 1.0
+    net: Optional[dict] = None                # transport/gossip/repair stats
+    trace: Optional[AsyncTrace] = None
+    stores: Optional[list] = None
+    engine: Optional[SelectionEngine] = None
+    models: Optional[dict] = None
+    transport: Optional[object] = None
+    gossip: Optional[object] = None
+    churn: Optional[object] = None
+    repair: Optional[object] = None
+
+    def summary(self) -> dict:
+        """Compact JSON-able report (the `repro.sim.run` CLI output)."""
+        d: dict = {"mode": self.mode, "seed": self.spec.seed,
+                   "data_kind": self.spec.data.kind,
+                   "n_clients": self.spec.data.n_clients}
+        if self.test_acc is not None:
+            d["test_acc_mean"] = round(float(np.mean(self.test_acc)), 4)
+            d["test_acc"] = [round(float(a), 4) for a in self.test_acc]
+        if self.local_frac is not None:
+            d["local_frac_mean"] = round(float(np.mean(self.local_frac)), 4)
+        if self.selections is not None:
+            d["n_selections"] = int(sum(len(v)
+                                        for v in self.selections.values()))
+        if self.coverage is not None:
+            d["coverage"] = round(float(self.coverage), 4)
+            d["t_full"] = (None if self.t_full is None
+                           or math.isnan(self.t_full)
+                           else round(float(self.t_full), 3))
+        if self.trace is not None:
+            d["n_events"] = len(self.trace.events)
+        if self.net is not None:
+            d["net"] = self.net
+        return d
+
+
+class Experiment:
+    """Builds and runs the scenario an `ExperimentSpec` describes.
+
+    Keyword overrides inject pre-built collaborators (the compatibility
+    shims' path): anything injected is used as-is, anything absent is
+    built from the spec through the component registry.
+    """
+
+    def __init__(self, spec: ExperimentSpec, *, datasets=None,
+                 models=None, ccfg=None, transport=None, gossip=None,
+                 churn=None, repair=None,
+                 train_cost: Optional[Callable] = None):
+        self.spec = spec
+        self.datasets = datasets
+        self.models = models
+        self.ccfg = ccfg
+        self.world = None            # prediction_world: (labels, mats)
+        self.stores: Optional[list] = None
+        self.engine: Optional[SelectionEngine] = None
+        self.neighbors = None
+        self.transport = transport
+        self.gossip = gossip
+        self.churn = churn
+        self.repair = repair
+        self.train_cost = train_cost
+        self._injected = {"transport": transport, "gossip": gossip,
+                          "churn": churn, "repair": repair,
+                          "train_cost": train_cost}
+        self._built = False
+        self._ran = False
+        if datasets is not None and len(datasets) != spec.data.n_clients:
+            raise ValueError(
+                f"injected datasets ({len(datasets)} clients) do not match "
+                f"spec.data.n_clients={spec.data.n_clients}")
+
+    @classmethod
+    def from_spec(cls, spec: ExperimentSpec) -> "Experiment":
+        return cls(spec)
+
+    # ---- properties ----------------------------------------------------
+    @property
+    def n_classes(self) -> int:
+        return self.spec.data.n_classes
+
+    @property
+    def models_per_client(self) -> int:
+        if self.spec.data.kind in _IMAGE_KINDS:
+            return len(self.spec.train.families)
+        return self.spec.data.models_per_client
+
+    # ---- staged construction ------------------------------------------
+    def _ensure_world(self) -> None:
+        data = self.spec.data
+        if data.kind == "synthetic_images" and self.datasets is None:
+            self.datasets = build_client_datasets(data, self.spec.seed)
+        elif data.kind == "external" and self.datasets is None:
+            raise ValueError('data.kind="external" requires datasets to be '
+                             "injected (Experiment(spec, datasets=...))")
+        elif data.kind == "prediction_world" and self.world is None:
+            self.world = build_prediction_world(data, self.spec.seed)
+
+    def prepare_data(self):
+        """Materialize (and return) just the world — datasets for image
+        kinds, (labels, mats) for prediction worlds — without training
+        or store construction. Lets benchmarks keep data generation
+        outside their timed regions."""
+        self._ensure_world()
+        return self.datasets if self.spec.data.kind in _IMAGE_KINDS \
+            else self.world
+
+    def _ensure_models(self) -> None:
+        """Local training (images worlds only). Reuses the core helper so
+        seeds — and therefore traces — match the legacy drivers."""
+        from repro.core.fedpae import train_all_clients
+        if self.spec.data.kind not in _IMAGE_KINDS or \
+                self.models is not None:
+            return
+        self._ensure_world()
+        cfg = fedpae_config(self.spec)
+        self.models, self.ccfg = train_all_clients(self.datasets, cfg,
+                                                   self.n_classes)
+
+    def build(self) -> "Experiment":
+        """Materialize everything the run needs: world, trained models,
+        stores (filled for sync, empty for async), engine, and — async —
+        the registry-built p2p stack. Idempotent."""
+        from repro.core.fedpae import _empty_stores, build_stores
+        if self._built:
+            return self
+        spec = self.spec
+        data, sel = spec.data, spec.selection
+        self._ensure_world()
+        sync = spec.schedule.mode == "sync"
+        if sync and data.kind not in _IMAGE_KINDS:
+            raise ValueError(
+                f'schedule.mode="sync" needs image datasets '
+                f'(data.kind in {_IMAGE_KINDS}), got {data.kind!r}')
+        if sync:
+            declared = [s for s in ("transport", "gossip", "churn",
+                                    "repair")
+                        if getattr(spec.network, s) is not None]
+            injected = [s for s, v in self._injected.items()
+                        if v is not None]
+            if declared or injected:
+                what = (f"spec component(s) {declared}" if declared
+                        else "") + (" and " if declared and injected
+                                    else "") + \
+                       (f"injected collaborator(s) {injected}"
+                        if injected else "")
+                raise ValueError(
+                    f'schedule.mode="sync" cannot honor {what}: the '
+                    "synchronous protocol has no exchange simulation — "
+                    'switch to schedule.mode="async" or drop them '
+                    "(silently ignoring them would report a lossless "
+                    "run as if the declared network had been simulated)")
+        if data.kind in _IMAGE_KINDS:
+            self._ensure_models()
+            cfg = fedpae_config(spec)
+            self.stores = (build_stores(self.datasets, self.models,
+                                        self.ccfg, cfg) if sync
+                           else _empty_stores(self.datasets, cfg,
+                                              self.n_classes))
+        elif data.kind == "prediction_world":
+            labels, _ = self.world
+            self.stores = build_world_stores(data, labels,
+                                             sel.store_capacity)
+        if self.stores is not None and sel.enabled:
+            self.engine = SelectionEngine(
+                self.stores, sel.nsga(spec.seed),
+                use_kernel=sel.use_kernel,
+                seed=sel.seed if sel.seed is not None else spec.seed,
+                ensemble_k=(sel.ensemble_k if sel.ensemble_k is not None
+                            else sel.k),
+                device_resident=sel.device_resident)
+        if not sync:
+            n_val = (max(len(d.y_va) for d in self.datasets)
+                     if self.datasets else None)
+            # injected collaborators participate in the build context,
+            # so spec-built dependents (repair around gossip, gossip
+            # around churn) wire against the instances that actually run
+            net = build_network(spec, data.n_clients, n_val=n_val,
+                                injected=self._injected)
+            self.neighbors = net["neighbors"]
+            for slot in ("transport", "gossip", "churn", "repair",
+                         "train_cost"):
+                setattr(self, slot, net[slot])
+        self._built = True
+        return self
+
+    # ---- drivers -------------------------------------------------------
+    def run(self) -> RunResult:
+        """Single-shot: stores, gossip version vectors, and transport
+        counters are mutated by the drive, so a second run() over the
+        same state would be a silently-different experiment — construct
+        a fresh Experiment (or `Experiment.from_spec(result.spec)`) to
+        re-run."""
+        if self._ran:
+            raise RuntimeError(
+                "this Experiment already ran; its stores and p2p state "
+                "are consumed — build a fresh one with "
+                "Experiment.from_spec(spec) to re-run")
+        self.build()
+        self._ran = True
+        if self.spec.schedule.mode == "sync":
+            return self._run_sync()
+        return self._run_async()
+
+    def _run_sync(self) -> RunResult:
+        """The paper's synchronous protocol: stores complete, ONE batched
+        selection over every client, then masked lazy serving (the body
+        of the legacy `run_fedpae`)."""
+        engine, stores = self.engine, self.stores
+        if engine is None:
+            raise ValueError('schedule.mode="sync" requires '
+                             "selection.enabled=True")
+        engine.select()  # one vmapped NSGA-II run for ALL clients
+        accs, local_fracs, chroms, member_accs = [], [], [], []
+        for c, data in enumerate(self.datasets):
+            vote, chrom = engine.serve(c, data.x_te)
+            mask = chrom > 0.5
+            accs.append(accuracy(vote, data.y_te))
+            local_fracs.append(float((mask & stores[c].is_local()).sum()
+                                     / max(1, mask.sum())))
+            chroms.append(chrom)
+            res = engine.results.get(c)  # absent when the store can't fill
+            member_accs.append(np.asarray(res["member_acc"])
+                               if res is not None
+                               else np.full(stores[c].capacity, np.nan))
+        return RunResult(
+            spec=self.spec, mode="sync", test_acc=np.array(accs),
+            local_frac=np.array(local_fracs), chromosomes=chroms,
+            member_val_acc=member_accs, stores=stores, engine=engine,
+            models=self.models)
+
+    def _run_async(self) -> RunResult:
+        """The unified asynchronous driver: virtual-clock simulation
+        where arrivals incrementally materialize the stores and debounced
+        select events run REAL batched re-selection through the shared
+        engine, over whatever p2p stack the spec declares."""
+        spec = self.spec
+        data, sched = spec.data, spec.schedule
+        n, mpc = data.n_clients, self.models_per_client
+        stores, engine = self.stores, self.engine
+        acfg = AsyncConfig(
+            n_clients=n, models_per_client=mpc,
+            speed_lognorm_sigma=sched.speed_lognorm_sigma,
+            link_latency=sched.link_latency,
+            select_debounce=sched.select_debounce,
+            seed=sched.seed if sched.seed is not None else spec.seed)
+
+        on_add = None
+        if data.kind in _IMAGE_KINDS:
+            from repro.core.fedpae import _make_entry
+            families = spec.train.families
+            models, ccfg, F = self.models, self.ccfg, len(families)
+
+            def on_add(c, model_key, t):
+                owner, m = model_key
+                stores[c].add(_make_entry(owner, families[m], m, models,
+                                          ccfg, F), t=t)
+        elif data.kind == "prediction_world":
+            _, mats = self.world
+            C = data.n_classes
+
+            def on_add(c, model_key, t):
+                owner, m = model_key
+                gid = owner * mpc + m
+                stores[c].add(
+                    BenchEntry(model_id=gid, owner=owner, family=f"f{m}",
+                               predict=lambda x: np.full(
+                                   (len(x), C), 1.0 / C, np.float32)),
+                    preds=mats[(c, gid)], t=t)
+
+        curve: List[tuple] = []
+        latest: Dict[int, float] = {}
+        on_select_batch = None
+        if engine is not None and sched.select_during_run:
+            def on_select_batch(clients, bench_ids, t):
+                fresh = engine.select(clients, t=t)
+                out = {c: float(r["val_accuracy"])
+                       for c, r in fresh.items()}
+                latest.update(out)
+                if self.transport is not None and latest:
+                    curve.append((self.transport.stats.bytes_sent,
+                                  float(np.mean(list(latest.values())))))
+                return out
+
+        trace = simulate_async(
+            acfg, self.neighbors, train_cost=self.train_cost,
+            on_add=on_add, on_select_batch=on_select_batch,
+            transport=self.transport, gossip=self.gossip,
+            churn=self.churn, repair=self.repair)
+
+        finals = [s[-1][1] if s else 0
+                  for s in trace.bench_sizes.values()]
+        coverage = sum(finals) / (n * n * mpc)
+        t_full = (max(s[-1][0] for s in trace.bench_sizes.values())
+                  if coverage == 1.0 else float("nan"))
+        test_acc = None
+        if data.kind in _IMAGE_KINDS and engine is not None:
+            test_acc = np.array([accuracy(engine.serve(c, d.x_te)[0],
+                                          d.y_te)
+                                 for c, d in enumerate(self.datasets)])
+        return RunResult(
+            spec=spec, mode="async", test_acc=test_acc,
+            selections=trace.selections,
+            select_batches=trace.select_batches, curve=curve or None,
+            coverage=coverage, t_full=t_full, net=trace.net, trace=trace,
+            stores=stores, engine=engine, models=self.models,
+            transport=self.transport, gossip=self.gossip,
+            churn=self.churn, repair=self.repair)
+
+    # ---- baselines -----------------------------------------------------
+    def local_ensemble(self) -> np.ndarray:
+        """The paper's 'local' baseline on this experiment's world and
+        models: each client mean-prob votes over only its own locally
+        trained models. Trains (or reuses) the same models as `run()`."""
+        from repro.core.fedpae import run_local_ensemble
+        self._ensure_models()
+        accs, self.models, self.ccfg = run_local_ensemble(
+            self.datasets, self.n_classes, fedpae_config(self.spec),
+            models=self.models, ccfg=self.ccfg)
+        return accs

@@ -1,0 +1,234 @@
+"""Declarative experiment specs: one serializable description per run.
+
+`ExperimentSpec` is the single entry point's input (DESIGN.md §9): a
+nested, dict/JSON-round-trippable, seed-complete description of a FedPAE
+scenario. Five sections mirror the five things a run needs:
+
+  DataSpec       — what world the fleet lives in: real non-IID image
+                   clients ("synthetic_images"), a quality-parameterized
+                   prediction-matrix world with no CNN training
+                   ("prediction_world"), a pure dissemination run with no
+                   stores at all ("none"), or caller-provided datasets
+                   ("external", the compatibility-shim path).
+  TrainSpec      — local training: model families, lr, epochs, width.
+  SelectionSpec  — NSGA-II shape, ensemble size, kernel/device-resident
+                   switches, bounded store capacity.
+  NetworkSpec    — topology plus four TAGGED component slots (transport,
+                   gossip, churn, repair), each a `ComponentSpec` resolved
+                   by name through `repro.sim.registry` so new transports
+                   and protocols plug in without touching the driver.
+  ScheduleSpec   — sync vs async, debounce, speeds, and the train-cost
+                   model (itself a tagged component).
+
+Seed-completeness: `ExperimentSpec.seed` is the ONE knob; every section
+and component whose params omit a `seed` inherits it at build time, so
+`to_dict()` plus the seed reproduces the trace bit-for-bit.
+
+`from_dict` is STRICT — unknown keys raise `ValueError` naming the
+allowed fields — because a silently-ignored typo in a sweep config is a
+wrong experiment, not a default one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import ClassVar, Optional, Tuple
+
+from repro.core.nsga2 import NSGAConfig
+
+
+def _check_keys(cls, d: dict, path: str) -> None:
+    allowed = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - allowed)
+    if unknown:
+        raise ValueError(
+            f"unknown {path} field(s) {unknown}; allowed: {sorted(allowed)}")
+
+
+def _jsonify(v):
+    """Recursively map spec values onto pure-JSON types (tuples->lists)."""
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return {f.name: _jsonify(getattr(v, f.name))
+                for f in dataclasses.fields(v)}
+    if isinstance(v, (list, tuple)):
+        return [_jsonify(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _jsonify(x) for k, x in v.items()}
+    return v
+
+
+@dataclasses.dataclass
+class ComponentSpec:
+    """A tagged component config: `name` picks the builder out of
+    `repro.sim.registry`, `params` is its keyword payload. Accepts the
+    shorthand forms ``"push"`` (bare name) and ``{"name": ..,
+    "params": ..}`` wherever a spec field expects a component."""
+    name: str
+    params: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def of(cls, v, path: str = "component") -> Optional["ComponentSpec"]:
+        if v is None or isinstance(v, ComponentSpec):
+            return v
+        if isinstance(v, str):
+            return cls(v)
+        if isinstance(v, dict):
+            _check_keys(cls, v, path)
+            if "name" not in v:
+                raise ValueError(f"{path}: component spec needs a 'name'")
+            return cls(v["name"], dict(v.get("params") or {}))
+        raise ValueError(f"{path}: cannot interpret {v!r} as a component "
+                         "spec (want a name, a ComponentSpec, or a "
+                         "{'name', 'params'} dict)")
+
+
+@dataclasses.dataclass
+class DataSpec:
+    KINDS: ClassVar[Tuple[str, ...]] = (
+        "synthetic_images", "prediction_world", "none", "external")
+
+    kind: str = "synthetic_images"
+    n_clients: int = 8
+    n_classes: int = 8
+    # synthetic_images: class-conditional generative images, Dirichlet
+    # label skew, 70/15/15 split per client
+    n_samples: int = 2400
+    image_size: int = 10
+    channels: int = 3
+    alpha: float = 0.1
+    # prediction_world / none: validation width and per-client model
+    # count of the trainingless world
+    n_val: int = 128
+    models_per_client: int = 2
+    quality_local: tuple = (0.55, 0.9)    # U[lo, hi) accuracy of own models
+    quality_remote: tuple = (0.2, 0.85)   # ... of peers' models
+    seed: Optional[int] = None            # None -> ExperimentSpec.seed
+    split_seed: Optional[int] = None      # None -> data seed + 1
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown data kind {self.kind!r}; "
+                             f"choose from {self.KINDS}")
+        self.quality_local = tuple(self.quality_local)
+        self.quality_remote = tuple(self.quality_remote)
+
+
+@dataclasses.dataclass
+class TrainSpec:
+    families: tuple = ("cnn4", "vgg", "resnet", "densenet", "inception")
+    lr: float = 0.05
+    batch: int = 32
+    max_epochs: int = 40
+    patience: int = 6
+    width: int = 16
+
+    def __post_init__(self):
+        self.families = tuple(self.families)
+
+
+@dataclasses.dataclass
+class SelectionSpec:
+    enabled: bool = True
+    pop_size: int = 100
+    generations: int = 100
+    k: int = 5
+    p_mut: float = 0.02
+    p_cross: float = 0.9
+    ensemble_k: Optional[int] = None      # None -> k
+    use_kernel: bool = False
+    device_resident: bool = True
+    store_capacity: Optional[int] = None  # bounded streaming stores (§6)
+    seed: Optional[int] = None            # None -> ExperimentSpec.seed
+
+    def nsga(self, default_seed: int) -> NSGAConfig:
+        return NSGAConfig(pop_size=self.pop_size,
+                          generations=self.generations, k=self.k,
+                          p_mut=self.p_mut, p_cross=self.p_cross,
+                          seed=self.seed if self.seed is not None
+                          else default_seed)
+
+
+@dataclasses.dataclass
+class NetworkSpec:
+    topology: str = "full"
+    topology_k: int = 3
+    topology_beta: float = 0.1
+    transport: Optional[ComponentSpec] = None
+    gossip: Optional[ComponentSpec] = None
+    churn: Optional[ComponentSpec] = None
+    repair: Optional[ComponentSpec] = None
+
+    def __post_init__(self):
+        for slot in ("transport", "gossip", "churn", "repair"):
+            setattr(self, slot,
+                    ComponentSpec.of(getattr(self, slot), f"network.{slot}"))
+
+
+@dataclasses.dataclass
+class ScheduleSpec:
+    MODES: ClassVar[Tuple[str, ...]] = ("sync", "async")
+
+    mode: str = "sync"
+    # async knobs (mirror fl.scheduler.AsyncConfig defaults)
+    speed_lognorm_sigma: float = 0.6
+    link_latency: float = 0.05
+    select_debounce: float = 0.1
+    train_cost: ComponentSpec = dataclasses.field(
+        default_factory=lambda: ComponentSpec("affine",
+                                              {"base": 1.0, "slope": 0.3}))
+    select_during_run: bool = True  # False: arrivals fill stores but no
+                                    # select events fire (dissemination /
+                                    # offline-selection benchmarks)
+    seed: Optional[int] = None      # None -> ExperimentSpec.seed
+
+    def __post_init__(self):
+        if self.mode not in self.MODES:
+            raise ValueError(f"unknown schedule mode {self.mode!r}; "
+                             f"choose from {self.MODES}")
+        self.train_cost = ComponentSpec.of(self.train_cost,
+                                           "schedule.train_cost")
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """The one declarative description of a run. Build and execute it
+    with `repro.sim.Experiment.from_spec(spec).run()`."""
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    train: TrainSpec = dataclasses.field(default_factory=TrainSpec)
+    selection: SelectionSpec = dataclasses.field(
+        default_factory=SelectionSpec)
+    network: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
+    schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
+    seed: int = 0
+
+    # ---- serialization ------------------------------------------------
+    def to_dict(self) -> dict:
+        return _jsonify(self)
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        _check_keys(cls, d, "spec")
+        sections = {"data": DataSpec, "train": TrainSpec,
+                    "selection": SelectionSpec, "network": NetworkSpec,
+                    "schedule": ScheduleSpec}
+        kw = {}
+        for name, scls in sections.items():
+            sub = d.get(name)
+            if sub is None:
+                continue
+            if isinstance(sub, scls):
+                kw[name] = sub
+                continue
+            _check_keys(scls, sub, name)
+            kw[name] = scls(**sub)
+        if "seed" in d:
+            kw["seed"] = int(d["seed"])
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
