@@ -1,0 +1,65 @@
+"""CI gate for the compiled array-world simulator (DESIGN.md §10).
+
+Reads the JSON rows dumped by `benchmarks/run.py --only simloop --json`
+and fails (exit 1) unless, at N=1024 on the deterministic small-world
+scenario, the compiled backend is at least 10x faster than the event
+loop while reproducing its dissemination metrics exactly: same message
+count, full coverage on both, t_full within one tick (0.05) — the
+perf-without-divergence claim the backend exists to prove.
+
+Usage: python benchmarks/check_simloop.py BENCH_simloop.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+ROW_EVENT = "simloop_event_N1024"
+ROW_COMPILED = "simloop_compiled_N1024"
+MIN_SPEEDUP = 10.0
+TICK = 0.05
+
+
+def _derived(rows: dict, name: str) -> dict:
+    return {k: float(v) for k, v in
+            re.findall(r"(\w+)=([0-9.]+)", rows[name]["derived"])}
+
+
+def main(path: str) -> int:
+    rows = {r["name"]: r for r in json.load(open(path))}
+    for name in (ROW_EVENT, ROW_COMPILED):
+        if name not in rows:
+            print(f"FAIL: benchmark row {name!r} missing from {path}")
+            return 1
+    ev, co = _derived(rows, ROW_EVENT), _derived(rows, ROW_COMPILED)
+    dt_ev = float(rows[ROW_EVENT]["us_per_call"])
+    dt_co = float(rows[ROW_COMPILED]["us_per_call"])
+    speedup = dt_ev / max(dt_co, 1e-9)
+    print(f"N=1024: event {dt_ev / 1e6:.1f}s vs compiled "
+          f"{dt_co / 1e6:.1f}s -> {speedup:.1f}x "
+          f"(msgs {ev.get('msgs'):.0f} vs {co.get('msgs'):.0f}, "
+          f"t_full {ev.get('t_full')} vs {co.get('t_full')})")
+    if ev.get("coverage") != 1.0 or co.get("coverage") != 1.0:
+        print("FAIL: a backend missed full dissemination "
+              f"(event={ev.get('coverage')} compiled={co.get('coverage')})")
+        return 1
+    if ev.get("msgs") != co.get("msgs"):
+        print("FAIL: message counts diverge on the deterministic tier "
+              "- the compiled backend no longer reproduces the event "
+              "loop exactly")
+        return 1
+    if abs(ev.get("t_full", 0.0) - co.get("t_full", 0.0)) > TICK + 1e-9:
+        print(f"FAIL: t_full diverges by more than one tick ({TICK})")
+        return 1
+    if speedup < MIN_SPEEDUP:
+        print(f"FAIL: compiled speedup {speedup:.1f}x is below the "
+              f"{MIN_SPEEDUP:.0f}x gate at N=1024")
+        return 1
+    print("OK: compiled backend is >=10x faster at N=1024 with exact "
+          "dissemination parity")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1]))

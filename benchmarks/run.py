@@ -422,6 +422,70 @@ def bench_select_incremental(smoke: bool = False):
              f"N=64 dirty_frac={frac} ")
 
 
+def bench_simloop(smoke: bool = False):
+    """Event loop vs the compiled array world (DESIGN.md §10) on the
+    same deterministic dissemination scenario: small-world push gossip,
+    constant hop latency, no drops — the tier where the two backends
+    must agree EXACTLY on every net counter. Each compiled row carries
+    its speedup over the event run at the same fleet size; the full
+    (non-smoke) variant adds a compiled-only N=10000 row with a coarser
+    tick — the regime the backend exists for, where the event loop
+    would take tens of minutes."""
+    from benchmarks.common import row
+    from repro.sim import Experiment, ExperimentSpec
+
+    def simloop_spec(n, backend, params, k):
+        return ExperimentSpec.from_dict({
+            "data": {"kind": "none", "n_clients": n,
+                     "models_per_client": 1},
+            "selection": {"enabled": False},
+            "network": {"topology": "small_world", "topology_k": k,
+                        "transport": {"name": "gossip",
+                                      "params": {"base_latency": 0.05,
+                                                 "jitter": 0.0,
+                                                 "drop_prob": 0.0}},
+                        "gossip": "push"},
+            "schedule": {"mode": "async", "select_during_run": False,
+                         "backend": {"name": backend, "params": params}},
+            "seed": 0})
+
+    for n in (128, 1024):
+        stats = {}
+        for backend, params in (("event", {}),
+                                ("compiled", {"tick": 0.05})):
+            exp = Experiment.from_spec(simloop_spec(n, backend, params, 4))
+            exp.build()
+            t0 = time.perf_counter()
+            r = exp.run()
+            stats[backend] = (time.perf_counter() - t0, r)
+        dt_ev, r_ev = stats["event"]
+        dt_co, r_co = stats["compiled"]
+        row(f"simloop_event_N{n}", dt_ev * 1e6,
+            f"coverage={r_ev.coverage:.4f} t_full={r_ev.t_full:.4f} "
+            f"msgs={r_ev.net['transport']['n_sent']} "
+            f"events_per_s={r_ev.perf['events_per_s']:.0f}")
+        row(f"simloop_compiled_N{n}", dt_co * 1e6,
+            f"coverage={r_co.coverage:.4f} t_full={r_co.t_full:.4f} "
+            f"msgs={r_co.net['transport']['n_sent']} "
+            f"speedup={dt_ev / max(dt_co, 1e-12):.2f} "
+            f"ticks={r_co.perf['n_ticks']} "
+            f"scan_s={r_co.perf['phases']['scan_s']:.2f}")
+    if smoke:
+        return
+    # full tier: the 10k-client fleet, compiled only, coarse 0.5s tick
+    exp = Experiment.from_spec(simloop_spec(
+        10_000, "compiled", {"tick": 0.5, "chunk_ticks": 16}, 8))
+    exp.build()
+    t0 = time.perf_counter()
+    r = exp.run()
+    dt = time.perf_counter() - t0
+    row("simloop_compiled_N10000", dt * 1e6,
+        f"coverage={r.coverage:.4f} t_full={r.t_full:.4f} "
+        f"msgs={r.net['transport']['n_sent']} "
+        f"ticks={r.perf['n_ticks']} "
+        f"scan_s={r.perf['phases']['scan_s']:.2f}")
+
+
 def bench_partition_fig4():
     """Fig 4: partition skew vs alpha."""
     from benchmarks.common import row
@@ -456,22 +520,33 @@ def bench_roofline_summary():
             f"dominant={r['dominant']} useful={r['useful_ratio'] or 0:.2f}")
 
 
-def main(smoke: bool = False, json_path: str = None) -> None:
+# single-suite entries runnable in isolation via --only (each accepts
+# the smoke flag); CI runs `--only simloop` as its own gated step so the
+# event-vs-compiled comparison gets a dedicated JSON artifact
+ONLY = {"simloop": bench_simloop}
+
+
+def main(smoke: bool = False, json_path: str = None,
+         only: str = None) -> None:
     print("name,us_per_call,derived")
-    if not smoke:
-        local_acc, res = bench_table1_accuracy()
-        bench_table2_negative_transfer(local_acc, res)
-        bench_table3_scalability()
-    bench_table4_cost()
-    bench_selection_throughput()
-    bench_select_incremental(smoke=smoke)
-    bench_gossip_scale()
-    bench_lossy_repair()
-    bench_nsga2_microbench()
-    bench_ensemble_fitness_kernel()
-    bench_partition_fig4()
-    if not smoke:
-        bench_roofline_summary()
+    if only:
+        ONLY[only](smoke=smoke)
+    else:
+        if not smoke:
+            local_acc, res = bench_table1_accuracy()
+            bench_table2_negative_transfer(local_acc, res)
+            bench_table3_scalability()
+        bench_table4_cost()
+        bench_selection_throughput()
+        bench_select_incremental(smoke=smoke)
+        bench_gossip_scale()
+        bench_lossy_repair()
+        bench_nsga2_microbench()
+        bench_ensemble_fitness_kernel()
+        bench_partition_fig4()
+        if not smoke:
+            bench_simloop(smoke=False)
+            bench_roofline_summary()
     if json_path:
         import json
         from benchmarks.common import ROWS
@@ -487,5 +562,7 @@ if __name__ == "__main__":
                     help="fast CI subset: skip the model-training tables")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump all rows as a JSON array (CI artifact)")
+    ap.add_argument("--only", default=None, choices=sorted(ONLY),
+                    help="run a single benchmark suite in isolation")
     args = ap.parse_args()
-    main(args.smoke, args.json)
+    main(args.smoke, args.json, args.only)

@@ -136,7 +136,26 @@ def main():
         fig.savefig("gossip_churn.png", dpi=120)
         print("\nwrote gossip_churn.png")
     except ImportError:
-        print("\n(matplotlib unavailable — skipped the PNG)")
+        # headless/minimal environments still get the figure's DATA:
+        # the same curves as JSON (+ a flat CSV) instead of pixels
+        import csv
+        import json
+        payload = {
+            "title": f"FedPAE gossip, {n} clients, 10% drop, churn",
+            "x": "cumulative bytes on wire (MB)",
+            "y": "mean validation accuracy",
+            "curves": {name: [[b / 1e6, a] for b, a in runs[name]["curve"]]
+                       for name in ("bounded", "unbounded")}}
+        with open("gossip_churn_curves.json", "w") as f:
+            json.dump(payload, f, indent=2)
+        with open("gossip_churn_curves.csv", "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["store", "mb_on_wire", "mean_val_acc"])
+            for name, curve in payload["curves"].items():
+                w.writerows([name, f"{b:.4f}", f"{a:.4f}"]
+                            for b, a in curve)
+        print("\n(matplotlib unavailable — wrote gossip_churn_curves"
+              ".json/.csv instead of the PNG)")
     print("\nOK: bounded streaming stores track unbounded accuracy under "
           "churn and loss, at prediction-matrix (not checkpoint) cost.")
 

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -75,6 +76,35 @@ class AsyncTrace:
     # ^ (t, n_clients) per drained select tick — how well the debounce
     #   grid coalesces the fleet into one batched (device-resident) select
     net: Optional[dict] = None         # transport/gossip/churn counters
+    perf: Optional[dict] = None        # in-band throughput counters
+    # ^ {"wall_s", "n_events", "events_per_s", "phases": {"net_s",
+    #   "select_s"}} — event-vs-compiled speedups are measured from the
+    #   trace itself, not with ad-hoc timers around the driver
+
+
+def client_speeds(cfg: AsyncConfig) -> np.ndarray:
+    """Per-client lognormal speed multipliers — THE shared seed
+    convention: both the event-granular loop below and the compiled
+    array-world backend (repro.sim.compiled) draw from this exact
+    stream, so train completions agree across backends."""
+    rng = np.random.default_rng(cfg.seed)
+    return np.exp(rng.normal(0, cfg.speed_lognorm_sigma, cfg.n_clients))
+
+
+def train_completions(cfg: AsyncConfig, train_cost: Callable,
+                      churn=None) -> np.ndarray:
+    """(n_clients, models_per_client) virtual completion time of every
+    local training — join-offset, speed-scaled, sequential per client.
+    The single source of truth for "trained" event times on BOTH
+    simulator backends."""
+    speeds = client_speeds(cfg)
+    out = np.zeros((cfg.n_clients, cfg.models_per_client))
+    for c in range(cfg.n_clients):
+        t_done = float(churn.join[c]) if churn is not None else 0.0
+        for m in range(cfg.models_per_client):
+            t_done += speeds[c] * train_cost(c, m)
+            out[c, m] = t_done
+    return out
 
 
 def _select_tick(t: float, debounce: float) -> int:
@@ -111,8 +141,8 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     """
     if repair is not None and (transport is None or gossip is None):
         raise ValueError("repair requires both transport and gossip layers")
-    rng = np.random.default_rng(cfg.seed)
-    speeds = np.exp(rng.normal(0, cfg.speed_lognorm_sigma, cfg.n_clients))
+    wall_start = time.perf_counter()
+    select_wall = 0.0
     q = []  # (time, seq, kind, client, payload, src)
     seq = 0
     bench = {c: set() for c in range(cfg.n_clients)}
@@ -179,11 +209,10 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             for dst in repair.wake(c, t):
                 push(t + repair.cfg.interval, "digest_send", c, dst)
 
+    completions = train_completions(cfg, train_cost, churn)
     for c in range(cfg.n_clients):
-        t_done = float(churn.join[c]) if churn is not None else 0.0
         for m in range(cfg.models_per_client):
-            t_done += speeds[c] * train_cost(c, m)
-            push(t_done, "trained", c, (c, m))
+            push(completions[c, m], "trained", c, (c, m))
     if repair is not None:
         for a, b in repair.edges:
             push(repair.cfg.start, "digest_send", a, b)
@@ -295,12 +324,17 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                     pending_select.discard(c2)
                     ready.append(c2)
                 trace.select_batches.append((t, len(ready)))
+                t_sel = time.perf_counter()
                 accs = on_select_batch(
                     ready, {b: sorted(bench[b]) for b in ready}, t) or {}
+                select_wall += time.perf_counter() - t_sel
                 for b in ready:
                     record_selection(b, t, accs.get(b))
             elif on_select is not None:
-                record_selection(c, t, on_select(c, sorted(bench[c]), t))
+                t_sel = time.perf_counter()
+                acc = on_select(c, sorted(bench[c]), t)
+                select_wall += time.perf_counter() - t_sel
+                record_selection(c, t, acc)
 
     if transport is not None or gossip is not None or churn is not None:
         trace.net = {"lost_offline": n_lost_offline}
@@ -310,4 +344,14 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             trace.net["gossip"] = gossip.stats.as_dict()
         if repair is not None:
             trace.net["repair"] = repair.stats.as_dict()
+    wall = time.perf_counter() - wall_start
+    trace.perf = {
+        "backend": "event", "wall_s": round(wall, 6),
+        "n_events": len(trace.events),
+        "events_per_s": round(len(trace.events) / max(wall, 1e-9), 1),
+        # phase split: the p2p/event machinery vs time spent inside the
+        # selection callbacks (the engine's GA + device flush)
+        "phases": {"net_s": round(wall - select_wall, 6),
+                   "select_s": round(select_wall, 6)},
+    }
     return trace

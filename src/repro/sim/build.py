@@ -115,6 +115,32 @@ def _repair_anti_entropy(params: dict, ctx: dict):
                                          churn=ctx.get("churn"))
 
 
+# ---- simulator backends -----------------------------------------------
+
+
+@register("backend", "event")
+def _backend_event(params: dict, ctx: dict):
+    """The event-granular heap loop (fl.scheduler.simulate_async) — the
+    golden reference every other backend is validated against."""
+    check_params(params, (), "backend[event]")
+    return lambda exp: exp._run_async_event()
+
+
+@register("backend", "compiled")
+def _backend_compiled(params: dict, ctx: dict):
+    """The jitted tick-stepped array world (repro.sim.compiled) for
+    10k-100k-client dissemination studies; `tick` defaults to the
+    transport base latency (1-tick hops)."""
+    check_params(params, ("tick", "chunk_ticks", "max_ticks",
+                          "key_block"), "backend[compiled]")
+    kw = {k: params[k] for k in params}
+
+    def run(exp):
+        from repro.sim.compiled import run_compiled
+        return run_compiled(exp, **kw)
+    return run
+
+
 # ---- network stack assembly -------------------------------------------
 
 

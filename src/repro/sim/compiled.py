@@ -1,0 +1,638 @@
+"""Compiled array-world simulator: the tick-stepped jitted backend.
+
+The event-granular loop (fl/scheduler.simulate_async) pops one heap
+event at a time through Python — perfect for auditing protocol logic,
+hopeless at 10k-100k clients. This module re-expresses the SAME
+dissemination process (push gossip + churn + anti-entropy repair over a
+lossy transport) as dense whole-fleet array transitions advanced one
+TICK at a time inside a single jitted `lax.scan`:
+
+  arrive    (N, K) int32   earliest pending arrival per (client, key),
+                           bit-packed as (tick << bits) | src so one
+                           scatter-min keeps (tick, src) paired (ties
+                           break toward the smallest src — see below);
+                           src == N is the SELF sentinel (own training).
+  have      (N, K) int32   tick at which the client admitted the key
+                           (INF = not yet) — the per-client version
+                           vector of the event world, flattened to
+                           version-0 booleans with admit times.
+  adj       (N, deg_max)   the gossip overlay, -1 padded.
+  repair    (E,)/(E, K)    per-directed-edge digest stream state:
+                           rounds / calm / active / next_dig /
+                           dig_arrive, and per-(edge, key) re-send
+                           attempt counts.
+
+One scan step = one tick: process due arrivals (churn-gated accept /
+loss / dedup), fan accepted keys out to neighbors with scatter-min,
+then run the repair subsystem (digest emission, receipt, gap re-sends,
+wake-on-admit). A chunked host loop re-invokes the jitted scan while
+work is pending, fast-forwarding over idle gaps (the device state knows
+the next pending tick, so quiet stretches cost nothing).
+
+Tick-quantization contract (DESIGN.md §10)
+------------------------------------------
+Shared-stream EXACTNESS: train completion times, churn join/leave
+edges, per-(client, window) availability coins, and the FIRST-HOP
+pushes of every freshly trained model reuse the event world's numpy
+streams verbatim (`train_completions`, `ChurnSchedule.online_matrix`/
+`leave_ticks`, `transport.edge_rng`), evaluated host-side in float64
+and then quantized to ticks. In the deterministic regime (drop_prob=0,
+jitter=0, bandwidth=inf, no churn) every hop latency is exact, so
+coverage, n_sent / n_accepted / n_dedup / bytes match the event
+backend EXACTLY and |t_full_compiled - t_full_event| <= tick (the
+train-completion ceil is the only quantization).
+
+Documented divergences (tolerance tiers, tests/test_compiled.py):
+  - in-scan randomness (forward drops/jitter, digest drops, re-send
+    backoff) comes from a splitmix-style counter hash, a DIFFERENT
+    realization of the same distributions than the numpy streams —
+    statistically matched, not bit-matched;
+  - the (N, K) arrival state keeps only the EARLIEST in-flight copy
+    per (client, key): under churn, a min-arrival lost to an offline
+    receiver also forgets later duplicates (repair re-delivers);
+  - digests snapshot the sender's version vector at ARRIVAL tick, not
+    send tick, and carry no peer_has belief state (no in-flight-skip);
+  - re-sends fire without the sender-online-at-fire-time recheck (the
+    backoff delay is baked into the arrival tick at digest-receipt
+    time).
+
+Scaling: work per tick is O(N * K * deg_max); at N = K = 10k that is a
+~400 MB state. `key_block` shards the key axis into independent runs
+(keys never interact when repair is off), which also keeps the int32
+message counters overflow-safe — the auto default picks blocks so each
+block counts < 2^29 sends.
+"""
+from __future__ import annotations
+
+import math
+import time
+from types import SimpleNamespace
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.scheduler import AsyncConfig, train_completions
+from repro.p2p.transport import edge_rng
+
+INF = np.int32(2**31 - 1)
+_EPS = 1e-4  # float32 ceil guard: latency/tick ratios land within 1e-7
+#              of integers when tick divides the latency; a true
+#              fractional part below 1e-4 is quantization noise
+
+# hash domains (in-scan rng streams)
+_D_FDROP, _D_FJIT = 0x1111, 0x2222        # forward drop / jitter
+_D_DDROP, _D_DJIT = 0x3333, 0x4444        # digest drop / jitter
+_D_BOFF, _D_RDROP, _D_RJIT = 0x5555, 0x6666, 0x7777  # re-send streams
+
+
+def _hash_u32(seed, dom, *parts):
+    """Splitmix-style counter hash -> uint32; the compiled backend's
+    in-scan analogue of `edge_rng` (same role, different realization)."""
+    h = jnp.uint32(0x243F6A88) ^ jnp.uint32(seed & 0xFFFFFFFF)
+    h = (h ^ jnp.uint32(dom)) * jnp.uint32(0x9E3779B1)
+    for p in parts:
+        h = h ^ jnp.asarray(p).astype(jnp.uint32)
+        h = h * jnp.uint32(0x85EBCA77)
+        h = h ^ (h >> 13)
+        h = h * jnp.uint32(0xC2B2AE3D)
+        h = h ^ (h >> 16)
+    return h
+
+
+def _hash01(seed, dom, *parts):
+    return _hash_u32(seed, dom, *parts).astype(jnp.float32) \
+        * jnp.float32(2.0**-32)
+
+
+def _ceil_ticks(lat, tick):
+    """Latency -> whole ticks, >= 1 (a hop never lands inside its own
+    send tick, so same-tick forward cascades cannot occur)."""
+    return jnp.maximum(
+        jnp.int32(1),
+        jnp.ceil(lat / jnp.float32(tick) - _EPS).astype(jnp.int32))
+
+
+# ---- world assembly ----------------------------------------------------
+
+
+def _make_world(acfg: AsyncConfig, gossip, transport, churn, repair,
+                tick: Optional[float]) -> SimpleNamespace:
+    """Validate the component stack and freeze every static parameter
+    the scan step closes over (python scalars + small device arrays)."""
+    if gossip is None or transport is None:
+        raise ValueError(
+            "the compiled backend requires both a gossip and a transport "
+            "component (the legacy single-hop broadcast path is "
+            "event-only); use backend='event'")
+    gs = gossip.array_state()          # validates push-only, fanout=0
+    tp = transport.array_params()      # validates inbox=0, constant sizer
+    n, mpc = acfg.n_clients, acfg.models_per_client
+    K = n * mpc
+    if tick is None:
+        tick = tp["base_latency"]
+    if tick <= 0:
+        raise ValueError(f"tick must be > 0 (got {tick}); the default is "
+                         "the transport base_latency")
+    bits = max(1, int(math.ceil(math.log2(n + 2))))
+    max_rep = (int(INF) >> bits) - 1   # largest packable tick
+    W = SimpleNamespace(
+        n=n, mpc=mpc, K=K, tick=float(tick), bits=bits, max_rep=max_rep,
+        src_mask=(1 << bits) - 1, deg_max=int(gs["deg_max"]),
+        adj=jnp.asarray(gs["adj"]),
+        base=float(tp["base_latency"]), jitter=float(tp["jitter"]),
+        drop=float(tp["drop_prob"]), nb=int(tp["nbytes"]),
+        inv_bw=(1.0 / tp["bandwidth"]
+                if math.isfinite(tp["bandwidth"]) else 0.0),
+        seed=int(tp["seed"]),
+        leave=jnp.asarray(churn.leave_ticks(tick)) if churn is not None
+        else jnp.full(n, INF, jnp.int32),
+        rep=None)
+    if repair is not None:
+        rs = repair.array_state(tick)
+        W.rep = SimpleNamespace(
+            E=int(rs["n_edges"]), e_src=jnp.asarray(rs["e_src"]),
+            e_dst=jnp.asarray(rs["e_dst"]), rev=jnp.asarray(rs["rev"]),
+            interval=int(rs["interval_ticks"]),
+            start=int(rs["start_tick"]), max_rounds=int(rs["max_rounds"]),
+            quiesce=int(rs["quiesce_after"]),
+            max_att=int(rs["max_attempts"]), budget=int(rs["budget"]),
+            boff_base=float(rs["backoff_base"]),
+            boff_factor=float(rs["backoff_factor"]),
+            bpe=int(rs["bytes_per_entry"]), seed=int(rs["seed"]))
+    return W
+
+
+def _init_block(W, acfg, train_cost, churn, gossip, k_lo: int,
+                k_hi: int) -> tuple:
+    """Host-side exact precompute for keys [k_lo, k_hi): self-arrivals
+    at train-completion ticks (SELF sentinel) and the FIRST-HOP pushes
+    of every trained model through the REAL `edge_rng` streams — the
+    draws the event backend would make for the same sends, so first-hop
+    drops and jitters are bit-identical across backends."""
+    n, mpc, bits, tick = W.n, W.mpc, W.bits, W.tick
+    Kb = k_hi - k_lo
+    arrive = np.full((n, Kb), int(INF), np.int64)
+    comp = train_completions(acfg, train_cost, churn)  # (n, mpc) float64
+    neighbors = gossip.neighbors
+    sent = dropped = swallowed = 0
+    for k in range(k_lo, k_hi):
+        c, m = divmod(k, mpc)
+        t_done = comp[c, m]
+        if churn is not None and churn.departed(c, t_done):
+            continue  # left before finishing: no admit, no pushes
+        t_tick = min(int(math.ceil(t_done / tick - 1e-9)), W.max_rep)
+        col = k - k_lo
+        arrive[c, col] = min(arrive[c, col], (t_tick << bits) | n)
+        if churn is not None and not churn.is_online(c, t_done):
+            swallowed += len(neighbors[c])  # sends gated at the sender
+            continue
+        for dst in neighbors[c]:
+            rng = edge_rng(W.seed, c, dst, (c, m))
+            d1 = rng.random()
+            d2 = rng.random()
+            sent += 1
+            if d1 < W.drop:
+                dropped += 1
+                continue
+            lat = W.base * (1.0 + W.jitter * d2) + W.nb * W.inv_bw
+            lt = max(1, int(math.ceil(lat / tick - 1e-9)))
+            a_tick = min(t_tick + lt, W.max_rep)
+            packed = (a_tick << bits) | c
+            arrive[dst, col] = min(arrive[dst, col], packed)
+    state = {
+        "arrive": jnp.asarray(arrive.astype(np.int32)),
+        "have": jnp.full((n, Kb), INF, jnp.int32),
+        "cnt": {k: jnp.int32(0)
+                for k in ("acc", "lost", "sent", "drop", "supp")},
+    }
+    if W.rep is not None:
+        R = W.rep
+        state["rounds"] = jnp.zeros(R.E, jnp.int32)
+        state["calm"] = jnp.zeros(R.E, jnp.int32)
+        state["active"] = jnp.ones(R.E, bool)
+        state["next_dig"] = jnp.full(R.E, R.start, jnp.int32)
+        state["dig_arrive"] = jnp.full(R.E, INF, jnp.int32)
+        state["attempts"] = jnp.zeros((R.E, Kb), jnp.int32)
+        state["rc"] = {k: jnp.int32(0) for k in
+                       ("dig_sent", "dig_drops", "dig_bytes", "dig_recv",
+                        "dig_lost", "dig_bytes_recv", "gaps", "resends",
+                        "deferred", "exhausted", "quiesced")}
+    return state, sent, dropped, swallowed
+
+
+# ---- the jitted tick step ----------------------------------------------
+
+
+def _make_chunk_fn(W, chunk_ticks: int, Kb: int):
+    """Build the jitted chunk advance for key blocks of width Kb. The
+    block offset `k_lo` is a traced argument, so every equal-width
+    block shares one compilation."""
+    c_col = jnp.arange(W.n, dtype=jnp.int32)[:, None]
+    # deterministic-link fast path: with jitter=0 every model hop costs
+    # the same whole number of ticks — no per-message draws at all
+    lt_const = max(1, int(math.ceil(
+        (W.base + W.nb * W.inv_bw) / W.tick - 1e-9)))
+
+    def _forwards(t, arrive, have, recv_acc, src, cnt, k_row, dep_owner):
+        """Fan this tick's accepted keys out one slot of the adjacency
+        at a time: O(N*K) per slot, never materializing (N, deg, K).
+        Arrivals toward clients that already hold the key are NOT
+        filtered here — they land in the cell, fall through the accept
+        mask, and are charged analytically as delivered - accepted."""
+
+        def body(s, carry):
+            arrive, sent, drop, supp = carry
+            u = jax.lax.dynamic_index_in_dim(W.adj, s, axis=1,
+                                             keepdims=False)  # (N,)
+            fwd = recv_acc & (u >= 0)[:, None] & (u[:, None] != src)
+            supp_m = fwd & dep_owner
+            send = fwd & ~dep_owner
+            if W.drop > 0:
+                r1 = _hash01(W.seed, _D_FDROP, c_col, u[:, None], k_row)
+                ok = send & (r1 >= W.drop)
+                drop = drop + (send.sum(dtype=jnp.int32)
+                               - ok.sum(dtype=jnp.int32))
+            else:
+                ok = send
+            if W.jitter > 0:
+                r2 = _hash01(W.seed, _D_FJIT, c_col, u[:, None], k_row)
+                lat = W.base * (1.0 + W.jitter * r2) + W.nb * W.inv_bw
+                arr = jnp.minimum(t + _ceil_ticks(lat, W.tick),
+                                  W.max_rep)
+            else:
+                arr = jnp.minimum(t + lt_const, W.max_rep)
+            usafe = jnp.clip(u, 0, W.n - 1)
+            packed = jnp.where(ok, (arr << W.bits) | c_col, INF)
+            arrive = arrive.at[usafe].min(packed)
+            return (arrive,
+                    sent + send.sum(dtype=jnp.int32),
+                    drop,
+                    supp + supp_m.sum(dtype=jnp.int32))
+
+        arrive, sent, drop, supp = jax.lax.fori_loop(
+            0, W.deg_max, body,
+            (arrive, cnt["sent"], cnt["drop"], cnt["supp"]))
+        return arrive, {**cnt, "sent": sent, "drop": drop, "supp": supp}
+
+    def _repair(t, state, have, woken, k_row, dep_owner_row):
+        R = W.rep
+        rounds, calm = state["rounds"], state["calm"]
+        active, next_dig = state["active"], state["next_dig"]
+        dig_arr, attempts = state["dig_arrive"], state["attempts"]
+        rc = state["rc"]
+        arrive = state["arrive"]
+        online = state["_online"]
+        e_idx = jnp.arange(R.E, dtype=jnp.int32)
+        dep_dst = t >= W.leave[R.e_dst]
+        dep_src = t >= W.leave[R.e_src]
+        # -- wake: this tick's admits/losses re-arm quiesced out-edges
+        w_e = woken[R.e_src]
+        calm = jnp.where(w_e, 0, calm)
+        rearm = w_e & ~active & (rounds < R.max_rounds) & ~dep_dst
+        active = active | rearm
+        next_dig = jnp.where(rearm, t + R.interval, next_dig)
+        # -- digest emission (sender side)
+        due_e = active & (next_dig == t)
+        ended = due_e & ((rounds >= R.max_rounds) | (calm >= R.quiesce)
+                         | dep_dst | dep_src)
+        emit_try = due_e & ~ended
+        active = active & ~ended
+        next_dig = jnp.where(ended, INF, next_dig)
+        rounds = rounds + emit_try.astype(jnp.int32)
+        # an offline sender still consumes a round (tick-bounded streams)
+        emit = emit_try & online[R.e_src]
+        next_dig = jnp.where(emit_try, t + R.interval, next_dig)
+        n_ent = (have[R.e_src] != INF).sum(1)
+        nb_e = R.bpe * jnp.maximum(1, n_ent)
+        d1 = _hash01(R.seed, _D_DDROP, e_idx, rounds)
+        d2 = _hash01(R.seed, _D_DJIT, e_idx, rounds)
+        ddrop = d1 < W.drop
+        lat = W.base * (1.0 + W.jitter * d2) \
+            + nb_e.astype(jnp.float32) * W.inv_bw
+        arr_d = jnp.minimum(t + _ceil_ticks(lat, W.tick), W.max_rep)
+        dig_arr = jnp.minimum(
+            dig_arr, jnp.where(emit & ~ddrop, arr_d, INF))
+        rc = {**rc,
+              "dig_sent": rc["dig_sent"] + emit.sum(dtype=jnp.int32),
+              "dig_drops": rc["dig_drops"]
+              + (emit & ddrop).sum(dtype=jnp.int32),
+              "dig_bytes": rc["dig_bytes"]
+              + jnp.where(emit, nb_e, 0).sum(dtype=jnp.int32)}
+        # -- digest receipt (receiver side, CURRENT have rows)
+        due_d = dig_arr == t
+        recv_d = due_d & online[R.e_dst]
+        lost_d = due_d & ~online[R.e_dst]
+        dig_arr = jnp.where(due_d, INF, dig_arr)
+        remote = have[R.e_src] != INF       # (E, K)
+        mine = have[R.e_dst] != INF
+        live = ~dep_owner_row               # (1, K)
+        nb_r = R.bpe * jnp.maximum(1, remote.sum(1))
+        rc = {**rc,
+              "dig_recv": rc["dig_recv"] + recv_d.sum(dtype=jnp.int32),
+              "dig_lost": rc["dig_lost"] + lost_d.sum(dtype=jnp.int32),
+              "dig_bytes_recv": rc["dig_bytes_recv"]
+              + jnp.where(recv_d, nb_r, 0).sum(dtype=jnp.int32)}
+        # reverse re-arm: src holds keys the receiver lacks -> restart
+        # the receiver's own digest stream toward src
+        wants = recv_d & (remote & ~mine & live).any(1) & (R.rev >= 0)
+        backc = jnp.clip(R.rev, 0, R.E - 1)      # safe gather index
+        rearm_b = wants & ~active[backc] & (rounds[backc] < R.max_rounds)
+        # rev is injective, so each target index is written at most
+        # once; rows with no reverse edge scatter out of bounds and
+        # are dropped explicitly
+        tgt = jnp.where(wants, R.rev, R.E)
+        calm = calm.at[tgt].set(0, mode="drop")
+        tgt_r = jnp.where(rearm_b, R.rev, R.E)
+        active = active.at[tgt_r].set(True, mode="drop")
+        next_dig = next_dig.at[tgt_r].set(t + R.interval, mode="drop")
+        # gaps: keys the receiver holds that the digest sender lacks
+        gaps = recv_d[:, None] & mine & ~remote & live
+        exh_now = gaps & (attempts == R.max_att)
+        eligible = gaps & (attempts < R.max_att)
+        rank = jnp.cumsum(eligible, axis=1)    # key-order budget
+        chosen = eligible & (rank <= R.budget)
+        deferred = eligible & ~chosen
+        att = attempts
+        attempts = attempts + (chosen | exh_now).astype(jnp.int32)
+        b1 = _hash01(R.seed, _D_BOFF, e_idx[:, None], k_row, att)
+        b2 = _hash01(R.seed, _D_RDROP, e_idx[:, None], k_row, att)
+        b3 = _hash01(R.seed, _D_RJIT, e_idx[:, None], k_row, att)
+        delay = R.boff_base * jnp.power(
+            jnp.float32(R.boff_factor), att.astype(jnp.float32)) \
+            * (1.0 + b1)
+        rdrop = b2 < W.drop
+        lat_r = W.base * (1.0 + W.jitter * b3) + W.nb * W.inv_bw
+        arr_r = jnp.minimum(t + _ceil_ticks(delay + lat_r, W.tick),
+                            W.max_rep)
+        packed = jnp.where(chosen & ~rdrop,
+                           (arr_r << W.bits) | R.e_dst[:, None], INF)
+        arrive = arrive.at[R.e_src].min(packed)
+        had_gap = gaps.any(1)
+        nogap = recv_d & ~had_gap
+        rc = {**rc,
+              "gaps": rc["gaps"] + gaps.sum(dtype=jnp.int32),
+              "resends": rc["resends"] + chosen.sum(dtype=jnp.int32),
+              "deferred": rc["deferred"]
+              + deferred.sum(dtype=jnp.int32),
+              "exhausted": rc["exhausted"]
+              + exh_now.sum(dtype=jnp.int32),
+              "quiesced": rc["quiesced"]
+              + (nogap & (calm + 1 == R.quiesce)).sum(dtype=jnp.int32)}
+        cnt = state["cnt"]
+        cnt = {**cnt,
+               "sent": cnt["sent"] + chosen.sum(dtype=jnp.int32),
+               "drop": cnt["drop"]
+               + (chosen & rdrop).sum(dtype=jnp.int32)}
+        calm = jnp.where(nogap, calm + 1, jnp.where(recv_d, 0, calm))
+        return {**state, "arrive": arrive, "cnt": cnt, "rounds": rounds,
+                "calm": calm, "active": active, "next_dig": next_dig,
+                "dig_arrive": dig_arr, "attempts": attempts, "rc": rc}
+
+    def make_step(k_lo):
+        k_row = (k_lo + jnp.arange(Kb, dtype=jnp.int32))[None, :]
+        owner_leave = W.leave[(k_lo + jnp.arange(Kb, dtype=jnp.int32))
+                              // W.mpc]           # (Kb,) departure tick
+
+        def step(state, xs):
+            t, online = xs
+            arrive, have = state["arrive"], state["have"]
+            cnt = state["cnt"]
+            due = (arrive >> W.bits) == t
+            src = arrive & W.src_mask
+            is_self = src == W.n           # SELF bypasses the online
+            #                                gate (trained-while-offline
+            #                                still admits, event parity)
+            lost = due & ~is_self & ~online[:, None]
+            accept = due & ~lost & (have == INF)
+            recv_acc = accept & ~is_self
+            have = jnp.where(accept, t, have)
+            arrive = jnp.where(due, INF, arrive)
+            cnt = {**cnt,
+                   "acc": cnt["acc"] + recv_acc.sum(dtype=jnp.int32),
+                   "lost": cnt["lost"] + lost.sum(dtype=jnp.int32)}
+            dep_owner = (t >= owner_leave)[None, :]
+            if W.deg_max > 0:
+                arrive, cnt = _forwards(t, arrive, have, recv_acc, src,
+                                        cnt, k_row, dep_owner)
+            state = {**state, "arrive": arrive, "have": have, "cnt": cnt}
+            if W.rep is not None:
+                woken = accept.any(1) | lost.any(1)
+                state["_online"] = online
+                state = _repair(t, state, have, woken, k_row, dep_owner)
+                del state["_online"]
+            return state, None
+        return step
+
+    @jax.jit
+    def chunk_fn(state, t0, k_lo, online_chunk):
+        ts = t0 + jnp.arange(chunk_ticks, dtype=jnp.int32)
+        state, _ = jax.lax.scan(make_step(k_lo), state,
+                                (ts, online_chunk))
+        return state
+
+    return chunk_fn
+
+
+# ---- host driver -------------------------------------------------------
+
+
+def _next_tick(state, bits: int) -> Optional[int]:
+    """Earliest tick with pending work, or None when the world is
+    quiescent — packing is monotone, so min(arrive) >> bits IS the
+    earliest pending arrival tick. The host loop fast-forwards to this
+    tick, so idle stretches between train completions or digest rounds
+    cost no scan steps."""
+    out = None
+    m = int(jnp.min(state["arrive"]))
+    if m != int(INF):
+        out = m >> bits
+    if "next_dig" in state:
+        nd = int(jnp.min(jnp.where(state["active"], state["next_dig"],
+                                   INF)))
+        da = int(jnp.min(state["dig_arrive"]))
+        for v in (nd, da):
+            if v != int(INF):
+                out = v if out is None else min(out, v)
+    return out
+
+
+def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
+                      transport, gossip, churn=None, repair=None,
+                      tick: Optional[float] = None,
+                      chunk_ticks: int = 256,
+                      max_ticks: Optional[int] = None,
+                      key_block: Optional[int] = None) -> dict:
+    """Run the array-world simulation. Returns a dict with `have_tick`
+    (N, K) int32 admit ticks (INF = never), `coverage`, `t_full`,
+    `net` (event-trace-shaped counters), `perf`, `tick`, `n_ticks`."""
+    wall0 = time.perf_counter()
+    W = _make_world(acfg, gossip, transport, churn, repair, tick)
+    if max_ticks is None:  # default: generous, but inside the packable
+        max_ticks = min(200_000, W.max_rep - 1)  # (tick << bits) range
+    if max_ticks >= W.max_rep:
+        raise ValueError(
+            f"max_ticks={max_ticks} exceeds the packable tick range "
+            f"({W.max_rep} at n_clients={W.n}); use a coarser tick")
+    if key_block is None:  # keep per-block int32 send counts < 2^29
+        per_key = max(1, W.n * max(1, W.deg_max))
+        key_block = max(1, min(W.K, (1 << 29) // per_key))
+    if repair is not None and key_block < W.K:
+        raise ValueError(
+            "repair couples keys through shared digest streams — "
+            f"key_block sharding (block={key_block} < K={W.K}) is only "
+            "available with network.repair=None")
+    key_block = min(key_block, W.K)
+    blocks = [(lo, min(lo + key_block, W.K))
+              for lo in range(0, W.K, key_block)]
+    build_s = scan_s = 0.0
+    n_ticks = 0
+    have_cols, cnt_tot, rc_tot = [], {}, {}
+    swallowed = init_sent = init_drop = 0
+    chunk_fns = {}
+    for k_lo, k_hi in blocks:
+        tb = time.perf_counter()
+        state, s0, d0, sw0 = _init_block(W, acfg, train_cost, churn,
+                                         gossip, k_lo, k_hi)
+        init_sent += s0
+        init_drop += d0
+        swallowed += sw0
+        Kb = k_hi - k_lo
+        if Kb not in chunk_fns:  # k_lo is traced: equal-width blocks
+            chunk_fns[Kb] = _make_chunk_fn(W, chunk_ticks, Kb)
+        chunk = chunk_fns[Kb]
+        build_s += time.perf_counter() - tb
+        ts = time.perf_counter()
+        while True:
+            nxt = _next_tick(state, W.bits)
+            if nxt is None:
+                break
+            if nxt >= max_ticks:
+                raise RuntimeError(
+                    f"compiled backend: pending work at tick {nxt} >= "
+                    f"max_ticks={max_ticks} — the run did not quiesce; "
+                    "raise max_ticks or check the repair/churn config")
+            online = (jnp.asarray(churn.online_matrix(nxt, chunk_ticks,
+                                                      W.tick))
+                      if churn is not None
+                      else jnp.ones((chunk_ticks, W.n), bool))
+            state = chunk(state, jnp.int32(nxt), jnp.int32(k_lo), online)
+            n_ticks += chunk_ticks
+        state = jax.tree_util.tree_map(
+            lambda x: jax.device_get(x), state)
+        scan_s += time.perf_counter() - ts
+        have_cols.append(np.asarray(state["have"]))
+        for k, v in state["cnt"].items():
+            cnt_tot[k] = cnt_tot.get(k, 0) + int(v)
+        if "rc" in state:
+            for k, v in state["rc"].items():
+                rc_tot[k] = rc_tot.get(k, 0) + int(v)
+    have = np.concatenate(have_cols, axis=1)
+    covered = have != int(INF)
+    coverage = float(covered.mean()) if have.size else 1.0
+    t_full = (float(have.max() * W.tick) if coverage == 1.0 and have.size
+              else float("nan"))
+    # counter assembly: mirror the event trace's net dict shapes
+    sent_m = init_sent + cnt_tot["sent"]
+    drop_m = init_drop + cnt_tot["drop"]
+    delivered_m = max(0, sent_m - drop_m - cnt_tot["lost"])
+    dedup = max(0, delivered_m - cnt_tot["acc"])
+    net = {
+        "lost_offline": swallowed + cnt_tot["lost"],
+        "transport": {
+            "n_sent": sent_m + rc_tot.get("dig_sent", 0),
+            "n_delivered": delivered_m + rc_tot.get("dig_recv", 0),
+            "n_dropped_link": drop_m + rc_tot.get("dig_drops", 0),
+            "n_dropped_inbox": 0,
+            "bytes_sent": sent_m * W.nb + rc_tot.get("dig_bytes", 0),
+            "bytes_delivered": delivered_m * W.nb
+            + rc_tot.get("dig_bytes_recv", 0),
+            "bytes_rejected": 0,
+        },
+        "gossip": {"n_accepted": cnt_tot["acc"], "n_dedup": dedup,
+                   "n_suppressed": cnt_tot["supp"], "n_pull": 0},
+    }
+    if repair is not None:
+        net["repair"] = {
+            "n_digests_sent": rc_tot["dig_sent"],
+            "n_digests_recv": rc_tot["dig_recv"],
+            "n_digests_lost": rc_tot["dig_lost"],
+            "n_gaps_found": rc_tot["gaps"],
+            "n_resends": rc_tot["resends"],
+            "n_budget_deferred": rc_tot["deferred"],
+            "n_inflight_skipped": 0,
+            "n_attempts_exhausted": rc_tot["exhausted"],
+            "n_quiesced": rc_tot["quiesced"],
+            "bytes_digests": rc_tot["dig_bytes"],
+        }
+    wall = time.perf_counter() - wall0
+    perf = {"backend": "compiled", "wall_s": round(wall, 6),
+            "n_ticks": n_ticks,
+            "ticks_per_s": round(n_ticks / max(wall, 1e-9), 1),
+            "phases": {"build_s": round(build_s, 6),
+                       "scan_s": round(scan_s, 6)}}
+    return {"have_tick": have, "coverage": coverage, "t_full": t_full,
+            "net": net, "perf": perf, "tick": W.tick, "n_ticks": n_ticks}
+
+
+# ---- experiment backend hook ------------------------------------------
+
+
+def run_compiled(exp, *, tick: Optional[float] = None,
+                 chunk_ticks: int = 256,
+                 max_ticks: Optional[int] = None,
+                 key_block: Optional[int] = None):
+    """`schedule.backend = "compiled"`: execute a built Experiment's
+    async run in the array world and wrap the result as a RunResult.
+    Worlds with per-sample state (image kinds) and in-run selection are
+    event-only — rejected loudly, never silently approximated."""
+    from repro.core.bench import BenchEntry
+    from repro.sim.experiment import RunResult
+    spec = exp.spec
+    data, sched = spec.data, spec.schedule
+    if data.kind not in ("none", "prediction_world"):
+        raise ValueError(
+            f'the compiled backend supports data.kind "none" and '
+            f'"prediction_world" (got {data.kind!r}): image worlds '
+            "train real models per event; use backend='event'")
+    if sched.select_during_run and exp.engine is not None:
+        raise ValueError(
+            "the compiled backend cannot run in-loop selection "
+            "(select events are event-granular): set "
+            "schedule.select_during_run=False or "
+            "selection.enabled=False")
+    n, mpc = data.n_clients, exp.models_per_client
+    acfg = AsyncConfig(
+        n_clients=n, models_per_client=mpc,
+        speed_lognorm_sigma=sched.speed_lognorm_sigma,
+        link_latency=sched.link_latency,
+        select_debounce=sched.select_debounce,
+        seed=sched.seed if sched.seed is not None else spec.seed)
+    out = simulate_compiled(
+        acfg, exp.train_cost, transport=exp.transport, gossip=exp.gossip,
+        churn=exp.churn, repair=exp.repair, tick=tick,
+        chunk_ticks=chunk_ticks, max_ticks=max_ticks,
+        key_block=key_block)
+    if data.kind == "prediction_world" and exp.stores is not None:
+        _, mats = exp.world
+        C = data.n_classes
+        have = out["have_tick"]
+        for c in range(n):
+            ks = np.flatnonzero(have[c] != int(INF))
+            for k in ks[np.argsort(have[c][ks], kind="stable")]:
+                gid = int(k)
+                owner, m = divmod(gid, mpc)
+                exp.stores[c].add(
+                    BenchEntry(model_id=gid, owner=owner, family=f"f{m}",
+                               predict=lambda x: np.full(
+                                   (len(x), C), 1.0 / C, np.float32)),
+                    preds=mats[(c, gid)],
+                    t=float(have[c][k] * out["tick"]))
+    return RunResult(
+        spec=spec, mode="async", coverage=out["coverage"],
+        t_full=out["t_full"], net=out["net"], perf=out["perf"],
+        stores=exp.stores, engine=exp.engine,
+        transport=exp.transport, gossip=exp.gossip, churn=exp.churn,
+        repair=exp.repair)

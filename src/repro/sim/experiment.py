@@ -55,6 +55,7 @@ class RunResult:
     coverage: Optional[float] = None          # async: dissemination fraction
     t_full: Optional[float] = None            # async: time to coverage 1.0
     net: Optional[dict] = None                # transport/gossip/repair stats
+    perf: Optional[dict] = None               # backend throughput counters
     trace: Optional[AsyncTrace] = None
     stores: Optional[list] = None
     engine: Optional[SelectionEngine] = None
@@ -86,6 +87,8 @@ class RunResult:
             d["n_events"] = len(self.trace.events)
         if self.net is not None:
             d["net"] = self.net
+        if self.perf is not None:
+            d["perf"] = self.perf
         return d
 
 
@@ -186,6 +189,11 @@ class Experiment:
             raise ValueError(
                 f'schedule.mode="sync" needs image datasets '
                 f'(data.kind in {_IMAGE_KINDS}), got {data.kind!r}')
+        if sync and spec.schedule.backend.name != "event":
+            raise ValueError(
+                f'schedule.mode="sync" runs no simulation loop — '
+                f"schedule.backend={spec.schedule.backend.name!r} only "
+                'applies to schedule.mode="async"')
         if sync:
             declared = [s for s in ("transport", "gossip", "churn",
                                     "repair")
@@ -284,10 +292,23 @@ class Experiment:
             models=self.models)
 
     def _run_async(self) -> RunResult:
-        """The unified asynchronous driver: virtual-clock simulation
-        where arrivals incrementally materialize the stores and debounced
-        select events run REAL batched re-selection through the shared
-        engine, over whatever p2p stack the spec declares."""
+        """Dispatch to the simulator backend the spec names —
+        registry-resolved like every other component, so
+        `schedule.backend` flips between the event-granular golden
+        reference and the compiled array world without touching any
+        caller."""
+        from repro.sim.registry import build as build_component
+        runner = build_component("backend", self.spec.schedule.backend,
+                                 {"spec": self.spec, "seed": self.spec.seed,
+                                  "n_clients": self.spec.data.n_clients})
+        return runner(self)
+
+    def _run_async_event(self) -> RunResult:
+        """The event-granular asynchronous driver (the golden
+        reference): virtual-clock simulation where arrivals
+        incrementally materialize the stores and debounced select
+        events run REAL batched re-selection through the shared engine,
+        over whatever p2p stack the spec declares."""
         spec = self.spec
         data, sched = spec.data, spec.schedule
         n, mpc = data.n_clients, self.models_per_client
@@ -356,7 +377,8 @@ class Experiment:
             spec=spec, mode="async", test_acc=test_acc,
             selections=trace.selections,
             select_batches=trace.select_batches, curve=curve or None,
-            coverage=coverage, t_full=t_full, net=trace.net, trace=trace,
+            coverage=coverage, t_full=t_full, net=trace.net,
+            perf=trace.perf, trace=trace,
             stores=stores, engine=engine, models=self.models,
             transport=self.transport, gossip=self.gossip,
             churn=self.churn, repair=self.repair)

@@ -23,7 +23,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Tuple
 
-KINDS = ("transport", "gossip", "churn", "repair", "train_cost", "sizer")
+KINDS = ("transport", "gossip", "churn", "repair", "train_cost", "sizer",
+         "backend")
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {k: {} for k in KINDS}
 

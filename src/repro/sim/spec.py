@@ -179,6 +179,12 @@ class ScheduleSpec:
     select_during_run: bool = True  # False: arrivals fill stores but no
                                     # select events fire (dissemination /
                                     # offline-selection benchmarks)
+    # which async simulator executes the run: the event-granular Python
+    # loop ("event", the golden reference) or the jitted tick-stepped
+    # array world ("compiled", repro.sim.compiled — params: tick,
+    # chunk_ticks, max_ticks, key_block). Registry kind "backend".
+    backend: ComponentSpec = dataclasses.field(
+        default_factory=lambda: ComponentSpec("event"))
     seed: Optional[int] = None      # None -> ExperimentSpec.seed
 
     def __post_init__(self):
@@ -187,6 +193,7 @@ class ScheduleSpec:
                              f"choose from {self.MODES}")
         self.train_cost = ComponentSpec.of(self.train_cost,
                                            "schedule.train_cost")
+        self.backend = ComponentSpec.of(self.backend, "schedule.backend")
 
 
 @dataclasses.dataclass
