@@ -1,0 +1,183 @@
+"""CI validators for the observability layer (DESIGN.md §11).
+
+Three independent checks, composable in one invocation:
+
+  --trace PATH    validate a Chrome/Perfetto trace-event JSON export:
+                  strict JSON (no bare NaN/Infinity tokens), required
+                  top-level shape, metadata-named tracks, well-formed
+                  "X"/"C" events, and 1:1 paired "s"/"f" flow ids —
+                  the properties ui.perfetto.dev needs to load it.
+  --metrics PATH  validate a metrics-frame JSON export: strict JSON,
+                  {scalars, series, meta} shape, numeric-or-null
+                  scalars, monotone-time series samples, and the
+                  presence of the core `net.*` / `coverage.*` names.
+  --bench PATH    gate the observability overhead rows in
+                  BENCH_simloop.json: the obs-DISABLED event run
+                  (`simloop_event_N1024_obsoff`) must stay within 2%
+                  of the baseline event row (the true no-op claim);
+                  the obs-ENABLED row's overhead is reported, ungated.
+
+Exit 0 when every requested check passes, 1 otherwise.
+
+Usage:
+    python benchmarks/check_obs.py --trace trace.json --metrics m.json
+    python benchmarks/check_obs.py --bench BENCH_simloop.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+MAX_OBSOFF_OVERHEAD = 1.02  # disabled-path cost gate (<= 2%)
+REQUIRED_METRICS = ("coverage.fraction", "coverage.t_full",
+                    "net.msgs_on_wire", "net.bytes_on_wire")
+
+
+def _strict_load(path: str):
+    def reject(tok):
+        raise ValueError(
+            f"{path}: non-strict JSON token {tok!r} (NaN/Infinity must "
+            "serialize as null)")
+    with open(path) as f:
+        return json.load(f, parse_constant=reject)
+
+
+def check_trace(path: str) -> list:
+    errs = []
+    try:
+        doc = _strict_load(path)
+    except ValueError as e:
+        return [str(e)]
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return [f"{path}: missing or empty 'traceEvents'"]
+    named = set()
+    flows = {"s": {}, "f": {}}
+    n_x = n_c = 0
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph not in ("M", "X", "C", "s", "f"):
+            errs.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if "pid" not in e or "tid" not in e or "name" not in e:
+            errs.append(f"event {i} ({ph}): missing pid/tid/name")
+            continue
+        if ph == "M":
+            if e["name"] == "thread_name":
+                named.add(e["tid"])
+            continue
+        if not isinstance(e.get("ts"), (int, float)):
+            errs.append(f"event {i} ({ph} {e['name']!r}): non-numeric ts")
+        if ph == "X":
+            n_x += 1
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                errs.append(f"event {i} (X {e['name']!r}): bad dur")
+        elif ph == "C":
+            n_c += 1
+            if "value" not in (e.get("args") or {}):
+                errs.append(f"event {i} (C {e['name']!r}): no args.value")
+        else:
+            flows[ph][e.get("id")] = e["tid"]
+    untracked = {e["tid"] for e in evs
+                 if e.get("ph") in ("X", "s", "f")} - named
+    if untracked:
+        errs.append(f"events on unnamed tracks (tids {sorted(untracked)}) "
+                    "— missing thread_name metadata")
+    if set(flows["s"]) != set(flows["f"]):
+        errs.append(f"unpaired flow ids: {len(flows['s'])} starts vs "
+                    f"{len(flows['f'])} finishes")
+    if n_x == 0:
+        errs.append("no 'X' slices — an empty trace is a broken export")
+    if not errs:
+        print(f"OK trace {path}: {len(evs)} events ({n_x} slices, "
+              f"{len(flows['s'])} flows, {n_c} counter samples, "
+              f"{len(named)} tracks)")
+    return errs
+
+
+def check_metrics(path: str) -> list:
+    errs = []
+    try:
+        doc = _strict_load(path)
+    except ValueError as e:
+        return [str(e)]
+    for sec in ("scalars", "series", "meta"):
+        if not isinstance(doc.get(sec), dict):
+            errs.append(f"{path}: missing '{sec}' section")
+    if errs:
+        return errs
+    for k, v in doc["scalars"].items():
+        if v is not None and not isinstance(v, (int, float)):
+            errs.append(f"scalar {k!r}: non-numeric, non-null value {v!r}")
+    for k, pts in doc["series"].items():
+        ts = [p[0] for p in pts]
+        if any(len(p) != 2 for p in pts):
+            errs.append(f"series {k!r}: samples must be [t, value] pairs")
+        elif ts != sorted(ts):
+            errs.append(f"series {k!r}: non-monotone sample times")
+    missing = [m for m in REQUIRED_METRICS if m not in doc["scalars"]]
+    if missing:
+        errs.append(f"core metric names missing from scalars: {missing}")
+    if not errs:
+        print(f"OK metrics {path}: {len(doc['scalars'])} scalars, "
+              f"{len(doc['series'])} series "
+              f"(backend={doc['meta'].get('backend')})")
+    return errs
+
+
+def check_bench(path: str) -> list:
+    rows = {r["name"]: r for r in json.load(open(path))}
+    base, off, on = ("simloop_event_N1024", "simloop_event_N1024_obsoff",
+                     "simloop_event_N1024_obs")
+    missing = [n for n in (base, off) if n not in rows]
+    if missing:
+        return [f"{path}: benchmark row(s) {missing} missing — run "
+                "benchmarks/run.py --only simloop"]
+
+    def derived(name):
+        return {k: float(v) for k, v in
+                re.findall(r"(\w+)=([0-9.]+)", rows[name]["derived"])}
+
+    overhead = derived(off)["overhead"]
+    print(f"obs-disabled overhead at N=1024: {overhead:.4f}x "
+          f"(gate <= {MAX_OBSOFF_OVERHEAD})")
+    if on in rows:
+        print(f"obs-enabled overhead at N=1024: "
+              f"{derived(on)['overhead']:.4f}x (reported, not gated)")
+    if overhead > MAX_OBSOFF_OVERHEAD:
+        return [f"obs-disabled event loop is {overhead:.4f}x the "
+                f"baseline at N=1024 — the no-op path gate is "
+                f"{MAX_OBSOFF_OVERHEAD}x"]
+    print("OK bench: the disabled observability path costs <= 2%")
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/check_obs.py",
+        description="validate observability exports and overhead rows")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="Chrome/Perfetto trace-event JSON to validate")
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="metrics-frame JSON to validate")
+    ap.add_argument("--bench", metavar="PATH",
+                    help="BENCH_simloop.json with the obs overhead rows")
+    args = ap.parse_args(argv)
+    if not (args.trace or args.metrics or args.bench):
+        ap.error("nothing to check: pass --trace, --metrics, or --bench")
+    errs = []
+    if args.trace:
+        errs += check_trace(args.trace)
+    if args.metrics:
+        errs += check_metrics(args.metrics)
+    if args.bench:
+        errs += check_bench(args.bench)
+    for e in errs:
+        print(f"FAIL: {e}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

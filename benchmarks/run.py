@@ -6,6 +6,7 @@ reduced sizes so the whole suite finishes on one CPU core.
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import numpy as np
@@ -449,27 +450,69 @@ def bench_simloop(smoke: bool = False):
                          "backend": {"name": backend, "params": params}},
             "seed": 0})
 
+    def timed(spec, keep=()):
+        """One hermetic timed run: build, collect, run, then keep only
+        the requested scalar fields so a finished run's multi-million-
+        entry trace never stays live while a later run is timed (cyclic
+        GC scans every live object — retained results skewed paired
+        timings by >10%)."""
+        exp = Experiment.from_spec(spec)
+        exp.build()
+        gc.collect()
+        t0 = time.perf_counter()
+        r = exp.run()
+        dt = time.perf_counter() - t0
+        out = {k: fn(r) for k, fn in keep}
+        del r, exp
+        return dt, out
+
+    scalar_keep = (
+        ("coverage", lambda r: r.coverage),
+        ("t_full", lambda r: r.t_full),
+        ("msgs", lambda r: r.net["transport"]["n_sent"]),
+    )
     for n in (128, 1024):
-        stats = {}
-        for backend, params in (("event", {}),
-                                ("compiled", {"tick": 0.05})):
-            exp = Experiment.from_spec(simloop_spec(n, backend, params, 4))
-            exp.build()
-            t0 = time.perf_counter()
-            r = exp.run()
-            stats[backend] = (time.perf_counter() - t0, r)
-        dt_ev, r_ev = stats["event"]
-        dt_co, r_co = stats["compiled"]
+        dt_ev, ev = timed(simloop_spec(n, "event", {}, 4), scalar_keep + (
+            ("events_per_s", lambda r: r.perf["events_per_s"]),))
         row(f"simloop_event_N{n}", dt_ev * 1e6,
-            f"coverage={r_ev.coverage:.4f} t_full={r_ev.t_full:.4f} "
-            f"msgs={r_ev.net['transport']['n_sent']} "
-            f"events_per_s={r_ev.perf['events_per_s']:.0f}")
+            f"coverage={ev['coverage']:.4f} t_full={ev['t_full']:.4f} "
+            f"msgs={ev['msgs']} events_per_s={ev['events_per_s']:.0f}")
+        if n == 1024:
+            # observability rows (DESIGN.md §11), timed back-to-back
+            # with the base event row (before the compiled run touches
+            # the heap): obsoff re-runs the identical disabled-obs
+            # scenario so its ratio against the base row bounds the
+            # threaded-but-disabled probe cost (gated <= 2% by
+            # benchmarks/check_obs.py --bench); the obs row measures
+            # the metrics-enabled cost (reported, ungated). The gated
+            # pair alternates base/obsoff and takes min-of-2 per side —
+            # interference noise is one-sided (it only ever adds time),
+            # so min-of-k pairs far tighter than single shots.
+            dt_off, off = timed(simloop_spec(n, "event", {}, 4), (
+                ("events_per_s", lambda r: r.perf["events_per_s"]),))
+            dt_ev = min(dt_ev, timed(simloop_spec(n, "event", {}, 4))[0])
+            dt_off = min(dt_off,
+                         timed(simloop_spec(n, "event", {}, 4))[0])
+            row(f"simloop_event_N{n}_obsoff", dt_off * 1e6,
+                f"overhead={dt_off / max(dt_ev, 1e-12):.4f} "
+                f"events_per_s={off['events_per_s']:.0f}")
+            spec_on = simloop_spec(n, "event", {}, 4)
+            spec_on.obs.enabled = True
+            dt_on, on = timed(spec_on, (
+                ("scalars", lambda r: len(r.metrics.scalars)),
+                ("series", lambda r: len(r.metrics.series))))
+            row(f"simloop_event_N{n}_obs", dt_on * 1e6,
+                f"overhead={dt_on / max(dt_ev, 1e-12):.4f} "
+                f"scalars={on['scalars']} series={on['series']}")
+        dt_co, co = timed(simloop_spec(n, "compiled", {"tick": 0.05}, 4),
+                          scalar_keep + (
+            ("n_ticks", lambda r: r.perf["n_ticks"]),
+            ("scan_s", lambda r: r.perf["phases"]["scan_s"])))
         row(f"simloop_compiled_N{n}", dt_co * 1e6,
-            f"coverage={r_co.coverage:.4f} t_full={r_co.t_full:.4f} "
-            f"msgs={r_co.net['transport']['n_sent']} "
+            f"coverage={co['coverage']:.4f} t_full={co['t_full']:.4f} "
+            f"msgs={co['msgs']} "
             f"speedup={dt_ev / max(dt_co, 1e-12):.2f} "
-            f"ticks={r_co.perf['n_ticks']} "
-            f"scan_s={r_co.perf['phases']['scan_s']:.2f}")
+            f"ticks={co['n_ticks']} scan_s={co['scan_s']:.2f}")
     if smoke:
         return
     # full tier: the 10k-client fleet, compiled only, coarse 0.5s tick

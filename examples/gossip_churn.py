@@ -30,7 +30,7 @@ import argparse
 import numpy as np
 
 from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
-                       NetworkSpec, ScheduleSpec, SelectionSpec)
+                       NetworkSpec, ObsSpec, ScheduleSpec, SelectionSpec)
 
 V, C = 128, 8
 # Checkpoint-exchange baseline: parameter count of the paper's smallest
@@ -65,6 +65,9 @@ def make_spec(n, mpc, capacity, *, seed=0, world_seed=17, drop=0.1,
             mode="async", select_debounce=0.5,
             train_cost=ComponentSpec("affine",
                                      {"base": 1.0, "slope": 0.2})),
+        # metrics on (no trace): the runs below report from the typed
+        # metrics frame in addition to the raw net counters
+        obs=ObsSpec(enabled=True),
         seed=seed)
 
 
@@ -86,7 +89,8 @@ def main():
                   if res.selections[c]]
         tstats = res.net["transport"]
         runs[name] = dict(acc=float(np.mean(finals)), curve=res.curve,
-                          bytes=tstats["bytes_sent"], evictions=evictions)
+                          bytes=tstats["bytes_sent"], evictions=evictions,
+                          metrics=res.metrics)
         print(f"\n[{name} cap={cap}] final mean val-acc "
               f"{runs[name]['acc']:.3f} over {len(finals)} selecting "
               f"clients | bytes-on-wire {tstats['bytes_sent']/1e6:.1f}"
@@ -145,9 +149,13 @@ def main():
             "x": "cumulative bytes on wire (MB)",
             "y": "mean validation accuracy",
             "curves": {name: [[b / 1e6, a] for b, a in runs[name]["curve"]]
-                       for name in ("bounded", "unbounded")}}
+                       for name in ("bounded", "unbounded")},
+            # the full typed metrics frames ride along, so the headless
+            # artifact carries everything the obs layer collected
+            "metrics": {name: runs[name]["metrics"].to_dict()
+                        for name in ("bounded", "unbounded")}}
         with open("gossip_churn_curves.json", "w") as f:
-            json.dump(payload, f, indent=2)
+            json.dump(payload, f, indent=2, allow_nan=False)
         with open("gossip_churn_curves.csv", "w", newline="") as f:
             w = csv.writer(f)
             w.writerow(["store", "mb_on_wire", "mean_val_acc"])

@@ -35,6 +35,7 @@ from repro.core.device_store import _pow2 as _pow2_pad
 from repro.core.nsga2 import NSGAConfig, client_keys
 from repro.core.selection import (local_only_chromosome, select_ensembles,
                                   select_ensembles_from_stats)
+from repro.obs.metrics import NULL_METRICS
 
 
 class SelectionEngine:
@@ -42,7 +43,8 @@ class SelectionEngine:
 
     def __init__(self, stores, nsga: NSGAConfig, use_kernel: bool = False,
                  seed: int = 0, ensemble_k: Optional[int] = None,
-                 device_resident: bool = True, v_max: Optional[int] = None):
+                 device_resident: bool = True, v_max: Optional[int] = None,
+                 metrics=None):
         self.stores = list(stores)
         self.nsga = nsga
         self.use_kernel = use_kernel
@@ -61,6 +63,7 @@ class SelectionEngine:
         self._v_max = widest if v_max is None else v_max
         self.device = (DeviceStoreBatch(self.stores, v_max=self._v_max)
                        if device_resident else None)
+        self.metrics = metrics if metrics is not None else NULL_METRICS
         self.results: Dict[int, dict] = {}   # client -> last selection dict
         self._keys_cache: Dict[tuple, object] = {}  # batch -> PRNG streams
 
@@ -107,6 +110,9 @@ class SelectionEngine:
         for c in ready:
             self._check_width(self.stores[c])
         B = _pow2_pad(len(ready))
+        mx = self.metrics
+        if mx.enabled:
+            mx.observe("engine.ga_batch_width", B, t=t)
         batch = ready + [ready[0]] * (B - len(ready))
         keys = self._keys_cache.get(tuple(batch))
         if keys is None:
@@ -123,7 +129,12 @@ class SelectionEngine:
                 raise RuntimeError(
                     "engine.stores grew without the device mirror — "
                     "admit late joiners through engine.add_store()")
-            self.device.flush()
+            if mx.enabled:
+                with mx.stopwatch("engine.flush_wall_s")(t=t):
+                    n_dirty = self.device.flush()
+                mx.observe("engine.flush_dirty_slots", n_dirty, t=t)
+            else:
+                self.device.flush()
             if batch == list(range(len(self.stores))):
                 dev = self.device
                 preds, labels, masks, acc, S = (dev.preds, dev.labels,

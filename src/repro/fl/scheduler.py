@@ -49,11 +49,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
+from repro.obs.metrics import NULL_METRICS, Stopwatch
 from repro.p2p.transport import DIGEST_OWNER, edge_rng
 
 
@@ -119,7 +119,7 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                    on_add: Optional[Callable] = None,
                    on_select_batch: Optional[Callable] = None,
                    transport=None, gossip=None, churn=None,
-                   repair=None) -> AsyncTrace:
+                   repair=None, obs=None) -> AsyncTrace:
     """train_cost(client, local_idx) -> virtual duration of that training.
     on_add(client, model_key, t) — a model (own or peer) entered the
       client's bench; the engine uses this to incrementally materialize
@@ -133,6 +133,12 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
       with per-edge deterministic latency streams.
     repair — optional p2p.AntiEntropyRepair (requires transport AND
       gossip): drives the periodic digest / bounded-resend event kinds.
+    obs — optional repro.obs.Obs: when given and enabled, the loop feeds
+      the metrics registry (coverage gauge, select-batch width, select
+      wall time) and — if `obs.trace` is set — the per-event Perfetto
+      trace collector (one track per client: train/recv/select/digest/
+      resend slices, send->recv flow events, bytes-on-wire and coverage
+      counter tracks).
 
     Returns the full event trace — tests assert gossip convergence and
     monotone bench growth on it. `trace.net` carries the p2p counters
@@ -141,12 +147,19 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     """
     if repair is not None and (transport is None or gossip is None):
         raise ValueError("repair requires both transport and gossip layers")
-    wall_start = time.perf_counter()
-    select_wall = 0.0
+    mx = obs.metrics if obs is not None else NULL_METRICS
+    tc = obs.trace if obs is not None else None
+    # the ONE perf_counter idiom: total run wall time plus the selection
+    # phase, which (bound to an enabled registry) doubles as the
+    # engine.select_wall_s series
+    sw_wall = Stopwatch().start()
+    sw_select = mx.stopwatch("engine.select_wall_s")
     q = []  # (time, seq, kind, client, payload, src)
     seq = 0
     bench = {c: set() for c in range(cfg.n_clients)}
     pending_select = set()
+    n_admits = 0
+    cov_total = cfg.n_clients * cfg.n_clients * cfg.models_per_client
     n_lost_offline = 0  # sends/recvs swallowed because an endpoint was away
     trace = AsyncTrace(events=[], bench_sizes={c: [] for c in range(cfg.n_clients)},
                        selections={c: [] for c in range(cfg.n_clients)})
@@ -189,6 +202,8 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                 else 0
         if transport is not None:
             arrival = transport.send(src, dst, key, t, version=version)
+            if tc is not None:  # dropped sends book wire bytes too
+                tc.counter("bytes_on_wire", t, transport.stats.bytes_sent)
             if arrival is None:
                 return
         else:
@@ -197,11 +212,19 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             arrival = t + lat
         if gossip is not None:
             gossip.note_sent(src, dst, key)
+        if tc is not None:
+            tc.flow(src, dst, f"({key[0]},{key[1]})", t, arrival)
         push(arrival, "recv", dst, (key, version), src)
 
     def admit(c, key, t):
         """A new model enters client c's bench."""
+        nonlocal n_admits
         bench[c].add(key)
+        n_admits += 1
+        if mx.enabled:  # fraction of all (client, key) pairs held
+            mx.set("coverage.fraction", n_admits / cov_total, t=t)
+        if tc is not None:
+            tc.counter("coverage", t, n_admits / cov_total)
         trace.bench_sizes[c].append((t, len(bench[c])))
         if on_add is not None:
             on_add(c, key, t)
@@ -210,6 +233,14 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                 push(t + repair.cfg.interval, "digest_send", c, dst)
 
     completions = train_completions(cfg, train_cost, churn)
+    if tc is not None:
+        # per-model training DURATIONS: completions are sequential per
+        # client starting at the join time, so slice widths come from
+        # consecutive differences
+        durs = completions.copy()
+        durs[:, 1:] = np.diff(completions, axis=1)
+        if churn is not None:
+            durs[:, 0] -= np.asarray(churn.join)[:cfg.n_clients]
     for c in range(cfg.n_clients):
         for m in range(cfg.models_per_client):
             push(completions[c, m], "trained", c, (c, m))
@@ -231,6 +262,9 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
         if kind == "trained":
             if churn is not None and churn.departed(c, t):
                 continue  # client left before finishing this training
+            if tc is not None:
+                tc.slice(c, f"train m{payload[1]}", t - durs[c, payload[1]],
+                         t, cat="train")
             admit(c, payload, t)
             if want_select:  # own models also re-trigger selection
                 schedule_select(c, t)
@@ -243,8 +277,15 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
         elif kind == "recv":
             key, ver = payload
             away = churn is not None and not churn.is_online(c, t)
+            if tc is not None:  # flow ends bind to this arrival slice
+                tc.slice(c, ("recv lost" if away else "recv") +
+                         f" ({key[0]},{key[1]})", t, t, cat="recv",
+                         args={"src": src, "ver": ver})
+                if transport is not None and transport.cfg.inbox_capacity:
+                    tc.counter("inbox_depth", t,
+                               int(transport.inflight[c]) - 1)
             if transport is not None:
-                transport.deliver(src, c, key, lost=away)
+                transport.deliver(src, c, key, lost=away, t=t)
             if away:
                 n_lost_offline += 1  # receiver away: message is lost
                 if gossip is not None:  # NACK: sender must not believe it
@@ -272,6 +313,9 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             if again:
                 push(t + repair.cfg.interval, "digest_send", c, payload)
             if entries is not None:
+                if tc is not None:
+                    tc.slice(c, f"digest_send r{rnd}", t, t, cat="repair",
+                             args={"dst": payload, "nbytes": nb})
                 arrival = transport.send(c, payload, (DIGEST_OWNER, rnd),
                                          t, nbytes=nb)
                 if transport.last_outcome != "inbox":
@@ -284,8 +328,12 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
         elif kind == "digest":
             rnd, entries, nb = payload
             away = churn is not None and not churn.is_online(c, t)
+            if tc is not None:
+                tc.slice(c, ("digest lost" if away else "digest") +
+                         f" r{rnd}", t, t, cat="repair",
+                         args={"src": src, "nbytes": nb})
             transport.deliver(src, c, (DIGEST_OWNER, rnd), lost=away,
-                              nbytes=nb)
+                              nbytes=nb, t=t)
             if away:
                 repair.stats.n_digests_lost += 1
                 continue
@@ -302,6 +350,9 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                 repair.refund_attempt(c, dst, key, ver)
                 n_lost_offline += 1
             else:
+                if tc is not None:
+                    tc.slice(c, f"resend ({key[0]},{key[1]})", t, t,
+                             cat="repair", args={"dst": dst, "ver": ver})
                 send_model(c, dst, key, t, version=ver)
                 if transport.last_outcome == "inbox":
                     # rejected at send time — nothing crossed the wire,
@@ -324,16 +375,22 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                     pending_select.discard(c2)
                     ready.append(c2)
                 trace.select_batches.append((t, len(ready)))
-                t_sel = time.perf_counter()
-                accs = on_select_batch(
-                    ready, {b: sorted(bench[b]) for b in ready}, t) or {}
-                select_wall += time.perf_counter() - t_sel
+                if mx.enabled:
+                    mx.observe("engine.select_batch_width", len(ready), t=t)
+                if tc is not None:
+                    tc.slice(c, f"select x{len(ready)}", t, t, cat="select",
+                             args={"clients": len(ready)})
+                with sw_select(t=t):
+                    accs = on_select_batch(
+                        ready, {b: sorted(bench[b]) for b in ready}, t) or {}
                 for b in ready:
                     record_selection(b, t, accs.get(b))
             elif on_select is not None:
-                t_sel = time.perf_counter()
-                acc = on_select(c, sorted(bench[c]), t)
-                select_wall += time.perf_counter() - t_sel
+                if tc is not None:
+                    tc.slice(c, "select x1", t, t, cat="select",
+                             args={"clients": 1})
+                with sw_select(t=t):
+                    acc = on_select(c, sorted(bench[c]), t)
                 record_selection(c, t, acc)
 
     if transport is not None or gossip is not None or churn is not None:
@@ -344,7 +401,8 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
             trace.net["gossip"] = gossip.stats.as_dict()
         if repair is not None:
             trace.net["repair"] = repair.stats.as_dict()
-    wall = time.perf_counter() - wall_start
+    wall = sw_wall.stop()
+    select_wall = sw_select.total
     trace.perf = {
         "backend": "event", "wall_s": round(wall, 6),
         "n_events": len(trace.events),

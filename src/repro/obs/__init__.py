@@ -1,0 +1,21 @@
+"""Observability layer (DESIGN.md §11): a typed, virtual-time-stamped
+metrics registry with a true no-op disabled path (`metrics`), run-scoped
+probe wiring + the canonical backend-parity counter emission (`probes`),
+and Chrome/Perfetto trace-event export for the event-granular simulator
+(`trace_export`).
+
+Enable per spec (`ExperimentSpec.obs`) or per CLI run
+(`python -m repro.sim.run --metrics-out m.json --trace-out t.json`).
+"""
+from repro.obs.metrics import (Metrics, MetricsFrame, NULL_METRICS,
+                               Stopwatch, json_ready, metric_key)
+from repro.obs.probes import (Obs, attach_metrics, emit_run_counters,
+                              finalize_run, make_obs)
+from repro.obs.trace_export import TraceCollector, export_chrome_trace
+
+__all__ = [
+    "Metrics", "MetricsFrame", "NULL_METRICS", "Obs", "Stopwatch",
+    "TraceCollector", "attach_metrics", "emit_run_counters",
+    "export_chrome_trace", "finalize_run", "json_ready", "make_obs",
+    "metric_key",
+]

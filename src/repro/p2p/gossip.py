@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import NULL_METRICS
 from repro.p2p.churn import ChurnSchedule
 from repro.p2p.params import config_from_params
 from repro.p2p.transport import ModelKey
@@ -98,6 +99,7 @@ class GossipProtocol:
         self.peer_has: List[Dict[int, Set[ModelKey]]] = [
             {dst: set() for dst in self.neighbors[c]} for c in range(n)]
         self.stats = GossipStats()
+        self.metrics = NULL_METRICS  # live series (DESIGN.md §11)
 
     # ---- helpers ------------------------------------------------------
     def _targets(self, c: int, key: ModelKey, version: int, t: float,
@@ -181,6 +183,8 @@ class GossipProtocol:
             return False, []
         self.have[c][key] = version
         self.stats.n_accepted += 1
+        if self.metrics.enabled:
+            self.metrics.inc("gossip.accepted", 1, t=t)
         forwards = [(dst, key)
                     for dst in self._targets(c, key, version, t, exclude=src)]
         if self.cfg.mode == "push_pull":

@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import NULL_METRICS
 from repro.p2p.churn import ChurnSchedule
 from repro.p2p.gossip import GossipProtocol
 from repro.p2p.params import config_from_params
@@ -133,6 +134,7 @@ class AntiEntropyRepair:
         # re-sends already scheduled per (src, dst, key, version)
         self.attempts: Dict[Tuple[int, int, ModelKey, int], int] = {}
         self.stats = RepairStats()
+        self.metrics = NULL_METRICS  # live series (DESIGN.md §11)
 
     # ---- digest emission (sender side) --------------------------------
     def poll(self, src: int, dst: int, t: float):
@@ -162,6 +164,8 @@ class AntiEntropyRepair:
         entries = tuple(sorted(self.gossip.have[src].items()))
         nb = digest_nbytes(len(entries), self.cfg.bytes_per_entry)
         self.stats.n_digests_sent += 1
+        if self.metrics.enabled:
+            self.metrics.inc("repair.digests_on_wire", 1, t=t)
         return entries, rnd, nb, True
 
     # ---- digest receipt (receiver side) -------------------------------

@@ -24,6 +24,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import NULL_METRICS
 from repro.p2p.params import config_from_params
 
 ModelKey = Tuple[int, int]  # (owner client, local model index)
@@ -113,6 +114,8 @@ class GossipTransport:
         self.inflight = np.zeros(n_clients, np.int64)
         self._attempts: Dict[Tuple[int, int, ModelKey, int], int] = {}
         self.stats = TransportStats()
+        self.metrics = NULL_METRICS  # live series (DESIGN.md §11);
+        #   repointed at the run's registry when the spec enables obs
         self.log: list = []  # (t_send, src, dst, key, "ok"|"drop"|"inbox")
         self.last_outcome: str = ""  # outcome of the most recent send()
         # ^ the sim is single-threaded, so callers that need to react to
@@ -133,6 +136,9 @@ class GossipTransport:
         nbytes = int(self.size_fn(src, dst, key)) if nbytes is None \
             else int(nbytes)
         self.stats.n_sent += 1
+        mx = self.metrics
+        if mx.enabled:
+            mx.inc("net.msgs_on_wire", 1, t=t)
         edge = (src, dst, key, version)
         attempt = self._attempts.get(edge, 0)
         self._attempts[edge] = attempt + 1
@@ -144,6 +150,8 @@ class GossipTransport:
         if dropped:
             self.stats.n_dropped_link += 1
             self.stats.bytes_sent += nbytes
+            if mx.enabled:  # dropped in flight: the bytes crossed the wire
+                mx.inc("net.bytes_on_wire", nbytes, t=t)
             self.log.append((t, src, dst, key, "drop"))
             self.last_outcome = "drop"
             return None
@@ -156,6 +164,12 @@ class GossipTransport:
             return None
         self.stats.bytes_sent += nbytes
         self.inflight[dst] += 1
+        if mx.enabled:
+            mx.inc("net.bytes_on_wire", nbytes, t=t)
+            if self.cfg.inbox_capacity:  # bounded-inbox configs only —
+                # the compiled backend rejects them, so this series never
+                # appears on a backend-parity run
+                mx.set("net.inbox_depth", int(self.inflight[dst]), t=t)
         lat = self.cfg.base_latency * (1.0 + self.cfg.jitter * jitter)
         if np.isfinite(self.cfg.bandwidth):
             lat += nbytes / self.cfg.bandwidth
@@ -192,12 +206,18 @@ class GossipTransport:
                 "nbytes": probes.pop(), "seed": int(self.cfg.seed)}
 
     def deliver(self, src: int, dst: int, key: ModelKey,
-                lost: bool = False, nbytes: Optional[int] = None) -> None:
+                lost: bool = False, nbytes: Optional[int] = None,
+                t: Optional[float] = None) -> None:
         """Called by the scheduler when the recv event fires: frees the
         inbox slot always, and books the delivered bytes unless the
         receiver lost the message (e.g. it was offline at arrival).
-        `nbytes` mirrors `send`'s override for digest messages."""
+        `nbytes` mirrors `send`'s override for digest messages; `t` (the
+        arrival's virtual time) stamps the inbox-depth gauge sample."""
         self.inflight[dst] -= 1
+        if self.metrics.enabled and self.cfg.inbox_capacity \
+                and t is not None:
+            self.metrics.set("net.inbox_depth", int(self.inflight[dst]),
+                             t=t)
         if not lost:
             self.stats.n_delivered += 1
             self.stats.bytes_delivered += (

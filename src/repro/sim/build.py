@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.fl.topology import make_topology
+from repro.obs import probes as _obs_probes
 from repro.p2p.churn import ChurnSchedule
 from repro.p2p.params import check_params
 from repro.p2p.gossip import GossipProtocol
@@ -139,6 +140,14 @@ def _backend_compiled(params: dict, ctx: dict):
         from repro.sim.compiled import run_compiled
         return run_compiled(exp, **kw)
     return run
+
+
+# ---- observability sinks ------------------------------------------------
+# The builders live in repro.obs.probes (which must stay importable from
+# the p2p/core layers without touching repro.sim); registration happens
+# here with the rest of the stock set.
+register("sink", "metrics_json")(_obs_probes.sink_metrics_json)
+register("sink", "perfetto")(_obs_probes.sink_perfetto)
 
 
 # ---- network stack assembly -------------------------------------------

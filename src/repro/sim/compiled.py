@@ -464,12 +464,22 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
                       tick: Optional[float] = None,
                       chunk_ticks: int = 256,
                       max_ticks: Optional[int] = None,
-                      key_block: Optional[int] = None) -> dict:
+                      key_block: Optional[int] = None,
+                      obs=None) -> dict:
     """Run the array-world simulation. Returns a dict with `have_tick`
     (N, K) int32 admit ticks (INF = never), `coverage`, `t_full`,
-    `net` (event-trace-shaped counters), `perf`, `tick`, `n_ticks`."""
+    `net` (event-trace-shaped counters), `perf`, `tick`, `n_ticks`.
+
+    `obs` (repro.obs.Obs, optional): when enabled, per-chunk counter
+    aggregates are sampled ON THE HOST at each chunk boundary
+    (probes.CompiledProbe) — the jitted scan itself stays untouched."""
     wall0 = time.perf_counter()
     W = _make_world(acfg, gossip, transport, churn, repair, tick)
+    probe = None
+    if obs is not None and getattr(obs, "metrics", None) is not None \
+            and obs.metrics.enabled:
+        from repro.obs.probes import CompiledProbe
+        probe = CompiledProbe(obs.metrics, W.nb)
     if max_ticks is None:  # default: generous, but inside the packable
         max_ticks = min(200_000, W.max_rep - 1)  # (tick << bits) range
     if max_ticks >= W.max_rep:
@@ -492,13 +502,15 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
     have_cols, cnt_tot, rc_tot = [], {}, {}
     swallowed = init_sent = init_drop = 0
     chunk_fns = {}
-    for k_lo, k_hi in blocks:
+    for bi, (k_lo, k_hi) in enumerate(blocks):
         tb = time.perf_counter()
         state, s0, d0, sw0 = _init_block(W, acfg, train_cost, churn,
                                          gossip, k_lo, k_hi)
         init_sent += s0
         init_drop += d0
         swallowed += sw0
+        if probe is not None:
+            probe.start_block(bi, s0, s0 * W.nb)
         Kb = k_hi - k_lo
         if Kb not in chunk_fns:  # k_lo is traced: equal-width blocks
             chunk_fns[Kb] = _make_chunk_fn(W, chunk_ticks, Kb)
@@ -520,6 +532,17 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
                       else jnp.ones((chunk_ticks, W.n), bool))
             state = chunk(state, jnp.int32(nxt), jnp.int32(k_lo), online)
             n_ticks += chunk_ticks
+            if probe is not None:
+                # tiny device->host pulls (counter dicts + the have
+                # bitmap); the scan itself is unchanged
+                h = np.asarray(jax.device_get(state["have"]))
+                cnt = {k: int(v) for k, v in
+                       jax.device_get(state["cnt"]).items()}
+                rc = ({k: int(v) for k, v in
+                       jax.device_get(state["rc"]).items()}
+                      if "rc" in state else None)
+                probe.sample((nxt + chunk_ticks) * W.tick, cnt, rc,
+                             int((h != int(INF)).sum()), h.size)
         state = jax.tree_util.tree_map(
             lambda x: jax.device_get(x), state)
         scan_s += time.perf_counter() - ts
@@ -583,7 +606,7 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
 def run_compiled(exp, *, tick: Optional[float] = None,
                  chunk_ticks: int = 256,
                  max_ticks: Optional[int] = None,
-                 key_block: Optional[int] = None):
+                 key_block: Optional[int] = None, obs=None):
     """`schedule.backend = "compiled"`: execute a built Experiment's
     async run in the array world and wrap the result as a RunResult.
     Worlds with per-sample state (image kinds) and in-run selection are
@@ -614,7 +637,8 @@ def run_compiled(exp, *, tick: Optional[float] = None,
         acfg, exp.train_cost, transport=exp.transport, gossip=exp.gossip,
         churn=exp.churn, repair=exp.repair, tick=tick,
         chunk_ticks=chunk_ticks, max_ticks=max_ticks,
-        key_block=key_block)
+        key_block=key_block, obs=obs if obs is not None
+        else getattr(exp, "obs", None))
     if data.kind == "prediction_world" and exp.stores is not None:
         _, mats = exp.world
         C = data.n_classes

@@ -30,6 +30,8 @@ from repro.core.bench import BenchEntry
 from repro.core.engine import SelectionEngine
 from repro.fl.client import accuracy
 from repro.fl.scheduler import AsyncConfig, AsyncTrace, simulate_async
+from repro.obs.metrics import json_ready
+from repro.obs.probes import attach_metrics, finalize_run, make_obs
 from repro.sim.build import (build_client_datasets, build_network,
                              build_prediction_world, build_world_stores)
 from repro.sim.compat import fedpae_config
@@ -57,6 +59,7 @@ class RunResult:
     net: Optional[dict] = None                # transport/gossip/repair stats
     perf: Optional[dict] = None               # backend throughput counters
     trace: Optional[AsyncTrace] = None
+    metrics: Optional[object] = None          # obs: collected MetricsFrame
     stores: Optional[list] = None
     engine: Optional[SelectionEngine] = None
     models: Optional[dict] = None
@@ -89,7 +92,12 @@ class RunResult:
             d["net"] = self.net
         if self.perf is not None:
             d["perf"] = self.perf
-        return d
+        if self.metrics is not None:
+            d["obs"] = {"n_scalars": len(self.metrics.scalars),
+                        "n_series": len(self.metrics.series)}
+        # strict-JSON guarantee: no bare NaN/Inf tokens ever reach a
+        # dumped summary (json.dump(..., allow_nan=False) never raises)
+        return json_ready(d)
 
 
 class Experiment:
@@ -117,6 +125,8 @@ class Experiment:
         self.churn = churn
         self.repair = repair
         self.train_cost = train_cost
+        self.obs = None              # repro.obs.Obs once built (or None)
+        self._sinks: list = []
         self._injected = {"transport": transport, "gossip": gossip,
                           "churn": churn, "repair": repair,
                           "train_cost": train_cost}
@@ -185,6 +195,20 @@ class Experiment:
         data, sel = spec.data, spec.selection
         self._ensure_world()
         sync = spec.schedule.mode == "sync"
+        self.obs = make_obs(spec.obs)
+        if spec.obs.sinks and self.obs is None:
+            raise ValueError(
+                "obs.sinks declared but obs.enabled is false — a sink "
+                "with nothing to write is a misconfigured run, not a "
+                "default one")
+        if self.obs is not None and self.obs.trace is not None and (
+                sync or spec.schedule.backend.name != "event"):
+            raise ValueError(
+                "obs.trace=true requires schedule.mode='async' with "
+                "schedule.backend='event': the Perfetto trace records "
+                "per-event slices, which the "
+                f"{'sync driver' if sync else 'compiled array world'} "
+                "does not produce")
         if sync and data.kind not in _IMAGE_KINDS:
             raise ValueError(
                 f'schedule.mode="sync" needs image datasets '
@@ -230,7 +254,9 @@ class Experiment:
                 seed=sel.seed if sel.seed is not None else spec.seed,
                 ensemble_k=(sel.ensemble_k if sel.ensemble_k is not None
                             else sel.k),
-                device_resident=sel.device_resident)
+                device_resident=sel.device_resident,
+                metrics=self.obs.metrics if self.obs is not None
+                else None)
         if not sync:
             n_val = (max(len(d.y_va) for d in self.datasets)
                      if self.datasets else None)
@@ -243,6 +269,17 @@ class Experiment:
             for slot in ("transport", "gossip", "churn", "repair",
                          "train_cost"):
                 setattr(self, slot, net[slot])
+        if self.obs is not None:
+            # repoint the instrumented subsystems' NULL_METRICS defaults
+            # at the run's live registry
+            attach_metrics(self.obs.metrics, self.transport, self.gossip,
+                           self.repair)
+        if spec.obs.sinks:
+            from repro.sim.registry import build as build_component
+            ctx = {"obs": self.obs, "spec": spec,
+                   "n_clients": data.n_clients}
+            self._sinks = [build_component("sink", s, ctx)
+                           for s in spec.obs.sinks]
         self._built = True
         return self
 
@@ -260,9 +297,13 @@ class Experiment:
                 "Experiment.from_spec(spec) to re-run")
         self.build()
         self._ran = True
-        if self.spec.schedule.mode == "sync":
-            return self._run_sync()
-        return self._run_async()
+        res = (self._run_sync() if self.spec.schedule.mode == "sync"
+               else self._run_async())
+        if self.obs is not None:
+            finalize_run(self.obs, res)
+        for sink in self._sinks:
+            sink(res)
+        return res
 
     def _run_sync(self) -> RunResult:
         """The paper's synchronous protocol: stores complete, ONE batched
@@ -361,7 +402,7 @@ class Experiment:
             acfg, self.neighbors, train_cost=self.train_cost,
             on_add=on_add, on_select_batch=on_select_batch,
             transport=self.transport, gossip=self.gossip,
-            churn=self.churn, repair=self.repair)
+            churn=self.churn, repair=self.repair, obs=self.obs)
 
         finals = [s[-1][1] if s else 0
                   for s in trace.bench_sizes.values()]

@@ -57,6 +57,13 @@ def main(argv=None) -> int:
                          "data.n_clients=16 (repeatable)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="also write the summary JSON to a file")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable observability and write the run's "
+                         "metrics frame (strict JSON) to this path")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable observability + event tracing and "
+                         "write a Chrome/Perfetto trace-event JSON to "
+                         "this path (async event backend only)")
     args = ap.parse_args(argv)
 
     with open(args.spec) as f:
@@ -73,13 +80,30 @@ def main(argv=None) -> int:
             pass  # bare strings stay strings
         apply_override(raw, path, value)
 
+    if args.metrics_out or args.trace_out:
+        # the CLI flags are sugar over ObsSpec: enable obs and append
+        # the matching sinks on top of whatever the file declares
+        apply_override(raw, "obs.enabled", True)
+        obs = raw.setdefault("obs", {})
+        sinks = list(obs.get("sinks") or [])
+        if args.metrics_out:
+            sinks.append({"name": "metrics_json",
+                          "params": {"path": args.metrics_out}})
+        if args.trace_out:
+            apply_override(raw, "obs.trace", True)
+            sinks.append({"name": "perfetto",
+                          "params": {"path": args.trace_out}})
+        obs["sinks"] = sinks
+
     spec = ExperimentSpec.from_dict(raw)
     result = Experiment.from_spec(spec).run()
     summary = result.summary()
-    print(json.dumps(summary, indent=2))
+    # summary() is json_ready: allow_nan=False proves no bare NaN/Inf
+    # tokens can reach a consumer's strict JSON parser
+    print(json.dumps(summary, indent=2, allow_nan=False))
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(summary, f, indent=2)
+            json.dump(summary, f, indent=2, allow_nan=False)
     return 0
 
 

@@ -19,6 +19,9 @@ scenario. Five sections mirror the five things a run needs:
                    and protocols plug in without touching the driver.
   ScheduleSpec   — sync vs async, debounce, speeds, and the train-cost
                    model (itself a tagged component).
+  ObsSpec        — observability (DESIGN.md §11): the metrics registry,
+                   optional Perfetto trace collection, and tagged output
+                   sinks; disabled by default with a true no-op path.
 
 Seed-completeness: `ExperimentSpec.seed` is the ONE knob; every section
 and component whose params omit a `seed` inherits it at build time, so
@@ -197,6 +200,31 @@ class ScheduleSpec:
 
 
 @dataclasses.dataclass
+class ObsSpec:
+    """Observability (DESIGN.md §11). Disabled by default — the probes
+    threaded through the scheduler, p2p stack, engine, and compiled
+    backend all take a true no-op path, so an obs-less run is
+    bit-identical to (and as fast as) the pre-observability code.
+
+    `enabled` turns on the metrics registry (and attaches the collected
+    `MetricsFrame` to `RunResult.metrics`); `trace` additionally records
+    the event backend's per-event Chrome/Perfetto trace (event backend
+    only — the compiled array world has no per-message events);
+    `resolution` is the virtual-time bucket width for time-series sample
+    decimation; `sinks` are tagged output components (registry kind
+    "sink": "metrics_json", "perfetto") invoked with the finished
+    RunResult."""
+    enabled: bool = False
+    trace: bool = False
+    resolution: float = 0.05
+    sinks: tuple = ()
+
+    def __post_init__(self):
+        self.sinks = tuple(ComponentSpec.of(s, "obs.sinks")
+                           for s in self.sinks)
+
+
+@dataclasses.dataclass
 class ExperimentSpec:
     """The one declarative description of a run. Build and execute it
     with `repro.sim.Experiment.from_spec(spec).run()`."""
@@ -206,6 +234,7 @@ class ExperimentSpec:
         default_factory=SelectionSpec)
     network: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
     schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     seed: int = 0
 
     # ---- serialization ------------------------------------------------
@@ -221,7 +250,7 @@ class ExperimentSpec:
         _check_keys(cls, d, "spec")
         sections = {"data": DataSpec, "train": TrainSpec,
                     "selection": SelectionSpec, "network": NetworkSpec,
-                    "schedule": ScheduleSpec}
+                    "schedule": ScheduleSpec, "obs": ObsSpec}
         kw = {}
         for name, scls in sections.items():
             sub = d.get(name)
