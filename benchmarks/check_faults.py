@@ -1,0 +1,63 @@
+"""CI gate for the fault subsystem (DESIGN.md §12): the Byzantine
+robustness claim.
+
+Reads the JSON rows dumped by `examples/byzantine_peers.py --json` and
+fails (exit 1) unless, at the worst injected Byzantine fraction (30%)
+on the lossy ring:
+
+  1. the validation-gated arm retains >= 95% of its fault-free mean
+     test accuracy (graceful degradation),
+  2. the ungated all-peers mean-vote ensemble degrades by >= 5 points
+     (the attack actually bites — without this the retention check is
+     vacuous), and
+  3. the gate's rejection counter is nonzero (the defense fired).
+
+Usage: python benchmarks/check_faults.py BENCH_faults.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+RETENTION_FLOOR = 0.95
+DEGRADE_FLOOR = 0.05
+
+
+def main(path: str) -> int:
+    rows = {r["name"]: r for r in json.load(open(path))}
+    need = ("byz0_gated", "byz30_gated", "byz0_allpeers", "byz30_allpeers")
+    missing = [n for n in need if n not in rows]
+    if missing:
+        print(f"FAIL: benchmark row(s) {missing} missing from {path}")
+        return 1
+    g0 = float(rows["byz0_gated"]["acc"])
+    g30 = float(rows["byz30_gated"]["acc"])
+    ap0 = float(rows["byz0_allpeers"]["acc"])
+    ap30 = float(rows["byz30_allpeers"]["acc"])
+    rejected = int(rows["byz30_gated"].get("rejected", 0))
+    retention = g30 / max(g0, 1e-9)
+    degrade = ap0 - ap30
+    print(f"30% byzantine: gated {g0:.3f} -> {g30:.3f} "
+          f"(retention {retention:.1%}) | all-peers {ap0:.3f} -> "
+          f"{ap30:.3f} (drop {degrade * 100:.1f} pts) | "
+          f"gate rejections {rejected}")
+    if retention < RETENTION_FLOOR:
+        print(f"FAIL: gated arm retains {retention:.1%} < "
+              f"{RETENTION_FLOOR:.0%} of fault-free accuracy")
+        return 1
+    if degrade < DEGRADE_FLOOR:
+        print(f"FAIL: ungated all-peers vote degraded only "
+              f"{degrade * 100:.1f} pts < {DEGRADE_FLOOR * 100:.0f} — "
+              "the attack is vacuous (seed drift?)")
+        return 1
+    if rejected <= 0:
+        print("FAIL: the gate rejected nothing at 30% byzantine — the "
+              "defense never fired")
+        return 1
+    print("OK: validation-gated admission holds FedPAE's floor under "
+          "30% byzantine collusion")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1]))

@@ -307,6 +307,82 @@ def bench_lossy_repair():
             f"norepair_us={dt[False]*1e6:.0f}")
 
 
+def bench_faults(smoke: bool = False):
+    """Fault subsystem (DESIGN.md §12) on pure-dissemination worlds: the
+    scheduler-level injectors at benchmark speed (no training, no
+    stores). Three rows, each one declarative spec on a 16-client lossy
+    ring with anti-entropy repair:
+
+      crash     — 25% of clients crash (volatile state lost) and rejoin;
+                  re-dissemination under a fresh gossip incarnation must
+                  still reach FULL coverage;
+      partition — the ring is bisected for a window; after the heal
+                  event re-arms quiesced repair streams, coverage must
+                  reach 1.0 (and t_full necessarily falls after heal);
+      corrupt   — 15% per-delivery corruption, 80% checksum coverage:
+                  detected payloads are discarded + re-sent (coverage
+                  still 1.0), admitted-corrupt ones are counted.
+
+    Every row's primary number is the simulation wall time — the fault
+    paths ride the same event loop, so this doubles as a perf canary for
+    the `faults is not None` branches."""
+    from benchmarks.common import row
+    from repro.sim import Experiment, ExperimentSpec
+
+    def fault_spec(faults: dict, drop: float = 0.1) -> ExperimentSpec:
+        return ExperimentSpec.from_dict({
+            "data": {"kind": "none", "n_clients": 16, "n_classes": 8,
+                     "n_val": 128, "models_per_client": 2},
+            "selection": {"enabled": False},
+            "network": {"topology": "ring",
+                        "transport": {"name": "gossip",
+                                      "params": {"base_latency": 0.05,
+                                                 "jitter": 1.0,
+                                                 "bandwidth": 50e6,
+                                                 "drop_prob": drop,
+                                                 "inbox_capacity": 64}},
+                        "gossip": "push",
+                        "repair": {"name": "anti_entropy",
+                                   "params": {"max_rounds": 60,
+                                              "max_attempts": 8}}},
+            "schedule": {"mode": "async",
+                         "train_cost": {"name": "affine",
+                                        "params": {"base": 1.0,
+                                                   "slope": 0.2}}},
+            "faults": faults, "seed": 0})
+
+    def run(name, faults, derive):
+        spec = fault_spec(faults)
+        exp = Experiment.from_spec(spec)
+        exp.build()
+        t0 = time.perf_counter()
+        res = exp.run()
+        dt = time.perf_counter() - t0
+        row(name, dt * 1e6, derive(res))
+
+    run("faults_crash_N16",
+        {"injectors": [{"name": "crash_restart",
+                        "params": {"fraction": 0.25, "at": 1.5,
+                                   "downtime": 1.5}}]},
+        lambda r: f"coverage={r.coverage:.4f} "
+                  f"crashes={r.net['faults']['n_crashes']} "
+                  f"restarts={r.net['faults']['n_restarts']}")
+    run("faults_partition_N16",
+        {"injectors": [{"name": "partition",
+                        "params": {"mode": "halves", "start": 1.0,
+                                   "duration": 3.0}}]},
+        lambda r: f"coverage={r.coverage:.4f} t_full={r.t_full:.2f} "
+                  f"heal_t=4.00 "
+                  f"blocked={r.net['faults']['n_partition_blocked']}")
+    run("faults_corrupt_N16",
+        {"injectors": [{"name": "corruption",
+                        "params": {"flip_prob": 0.15,
+                                   "detect_prob": 0.8}}]},
+        lambda r: f"coverage={r.coverage:.4f} "
+                  f"detected={r.net['transport']['n_corrupt_detected']} "
+                  f"admitted={r.net['transport']['n_corrupt_admitted']}")
+
+
 def bench_select_incremental(smoke: bool = False):
     """Restack vs device-resident incremental select (DESIGN.md §7): the
     same fleet, the same NSGA-II, the same per-client streams — one
@@ -566,7 +642,7 @@ def bench_roofline_summary():
 # single-suite entries runnable in isolation via --only (each accepts
 # the smoke flag); CI runs `--only simloop` as its own gated step so the
 # event-vs-compiled comparison gets a dedicated JSON artifact
-ONLY = {"simloop": bench_simloop}
+ONLY = {"simloop": bench_simloop, "faults": bench_faults}
 
 
 def main(smoke: bool = False, json_path: str = None,
@@ -584,6 +660,7 @@ def main(smoke: bool = False, json_path: str = None,
         bench_select_incremental(smoke=smoke)
         bench_gossip_scale()
         bench_lossy_repair()
+        bench_faults(smoke=smoke)
         bench_nsga2_microbench()
         bench_ensemble_fitness_kernel()
         bench_partition_fig4()

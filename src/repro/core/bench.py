@@ -99,6 +99,42 @@ class PredictionStore:
         self._materialize(entry.model_id, entry, preds, t)
         return entry.model_id
 
+    def _slot_for(self, model_id: int) -> Optional[int]:
+        """Physical slot of a global model id, None when absent. The
+        unbounded store is identity-mapped; the streaming store overrides
+        with its remap table."""
+        return model_id if 0 <= model_id < self.capacity else None
+
+    def _clear_slot(self, slot: int) -> None:
+        """Empty one slot: zero the row, mask it off, and bump its
+        generation so the engine's cached chromosome detects the stale
+        member and falls back (core/engine.py `_stale`)."""
+        self.entries[slot] = None
+        self.mask[slot] = False
+        self.preds[slot] = 0.0
+        self.hits[slot] = 0
+        self.last_used[slot] = 0.0
+        self.slot_gen[slot] += 1
+        self._mark_dirty(slot)
+
+    def invalidate(self, model_id: int) -> bool:
+        """Expel a resident model (admission-gate rejection of a refresh
+        that turned bad — repro.faults). True iff something was expelled."""
+        slot = self._slot_for(model_id)
+        if slot is None or not self.mask[slot]:
+            return False
+        self._clear_slot(slot)
+        return True
+
+    def wipe(self) -> int:
+        """Drop EVERY resident model (a crash losing the volatile store).
+        Returns the number of slots cleared; generations bump so nothing
+        cached survives the reboot."""
+        occupied = np.flatnonzero(self.mask)
+        for slot in occupied:
+            self._clear_slot(int(slot))
+        return len(occupied)
+
     def note_selection(self, selected: np.ndarray, t: float = 0.0):
         """The engine selected these slots at time t — the contribution
         signal the streaming store's eviction policy ranks by."""
@@ -194,6 +230,15 @@ class StreamingPredictionStore(PredictionStore):
         self.slot_of = {}               # global model id -> physical slot
         self.n_rejected = 0             # adds refused (everything pinned)
 
+    def _slot_for(self, model_id: int) -> Optional[int]:
+        return self.slot_of.get(model_id)
+
+    def _clear_slot(self, slot: int) -> None:
+        gone = self.entries[slot]
+        if gone is not None:
+            self.slot_of.pop(gone.model_id, None)
+        super()._clear_slot(slot)
+
     def _evictable(self) -> np.ndarray:
         occ = self.mask.copy()
         if self.protect_local:
@@ -206,17 +251,9 @@ class StreamingPredictionStore(PredictionStore):
             return None
         order = np.lexsort((cand, self.last_used[cand], self.hits[cand]))
         slot = int(cand[order[0]])
-        gone = self.entries[slot]
-        del self.slot_of[gone.model_id]
-        self.entries[slot] = None
-        self.mask[slot] = False
-        self.preds[slot] = 0.0
-        self.hits[slot] = 0
-        self.last_used[slot] = 0.0
-        self.slot_gen[slot] += 1        # invalidates cached chromosomes
-        self._mark_dirty(slot)          # device mirrors zero the row too
-        self.evictions += 1
-        return slot
+        self._clear_slot(slot)          # bumps slot_gen: cached
+        self.evictions += 1             # chromosomes invalidate; device
+        return slot                     # mirrors zero the row too
 
     def add(self, entry: BenchEntry, preds: Optional[np.ndarray] = None,
             t: float = 0.0):

@@ -98,6 +98,15 @@ def emit_run_counters(mx: Metrics, net: Optional[dict],
             mx.inc("net.bytes_sent", dig_bytes, kind="digest")
             mx.inc("net.bytes_delivered", tr["bytes_delivered"])
             mx.inc("net.bytes_rejected", tr["bytes_rejected"])
+            # corruption outcomes are emitted only when nonzero, so the
+            # compiled backend's always-zero counters produce the same
+            # (absent) series as an event run without a corruption
+            # injector — the exact-parity obs tests depend on it
+            if tr.get("n_corrupt_detected") or tr.get("n_corrupt_admitted"):
+                mx.inc("transport.corrupt", tr["n_corrupt_detected"],
+                       outcome="detected")
+                mx.inc("transport.corrupt", tr["n_corrupt_admitted"],
+                       outcome="admitted")
         mx.inc("net.msgs_lost", net.get("lost_offline", 0),
                cause="offline")
         if go is not None:
@@ -117,6 +126,25 @@ def emit_run_counters(mx: Metrics, net: Optional[dict],
                    rp["n_attempts_exhausted"])
             mx.inc("repair.quiesced", rp["n_quiesced"])
             mx.inc("repair.bytes_digests", rp["bytes_digests"])
+        fa = net.get("faults")
+        if fa is not None:
+            mx.inc("faults.injected", fa["n_byzantine_poisoned"],
+                   kind="byzantine")
+            mx.inc("faults.injected", fa["n_corrupt_detected"]
+                   + fa["n_corrupt_admitted"], kind="corruption")
+            mx.inc("faults.injected", fa["n_crashes"], kind="crash")
+            mx.inc("faults.injected", fa["n_partition_blocked"],
+                   kind="partition")
+            mx.inc("faults.restarts", fa["n_restarts"])
+        ad = net.get("admission")
+        if ad is not None:
+            mx.inc("admission.models", ad["n_admitted"],
+                   outcome="admitted")
+            mx.inc("admission.models", ad["n_quarantined"],
+                   outcome="quarantined")
+            mx.inc("admission.models", ad["n_rejected"],
+                   outcome="rejected")
+            mx.inc("admission.invalidated", ad["n_invalidated"])
     if coverage is not None:
         mx.set("coverage.fraction", float(coverage))
         # NaN (never reached full coverage) stays NaN in the frame and

@@ -98,10 +98,51 @@ class GossipProtocol:
         self.have: List[Dict[ModelKey, int]] = [dict() for _ in range(n)]
         self.peer_has: List[Dict[int, Set[ModelKey]]] = [
             {dst: set() for dst in self.neighbors[c]} for c in range(n)]
+        # crash-restart support (repro.faults): a rejoining client bumps
+        # its incarnation so its re-announcements outrank every held
+        # version, and `rejoined_at` lets owner-gone checks distinguish
+        # "departed for good" from "was down, came back".
+        self.incarnation: List[int] = [0] * n
+        self.rejoined_at: Dict[int, float] = {}
         self.stats = GossipStats()
         self.metrics = NULL_METRICS  # live series (DESIGN.md §11)
 
     # ---- helpers ------------------------------------------------------
+    def owner_gone(self, owner: int, t: float,
+                   churn: Optional[ChurnSchedule] = None) -> bool:
+        """Should owner's models stop propagating as of time t?
+
+        The old check was `churn.departed(owner, t)` alone — which kept
+        suppressing a crash-restarted client's models FOREVER after its
+        churn-visible downtime, because `departed` has no notion of
+        rejoining. A recorded rejoin at r <= t overrides the departure."""
+        ch = self.churn if churn is None else churn
+        if ch is None or not ch.departed(owner, t):
+            return False
+        r = self.rejoined_at.get(owner)
+        return r is None or r > t
+
+    def note_crash(self, c: int) -> None:
+        """Client c lost its volatile state: it no longer holds anything,
+        and its beliefs about what peers hold are gone with it."""
+        self.have[c].clear()
+        for known in self.peer_has[c].values():
+            known.clear()
+
+    def note_rejoin(self, c: int, t: float) -> None:
+        """Client c is back after a crash: bump its incarnation (so its
+        re-announced models outrank any version peers still hold), and
+        drop every OTHER client's belief that c holds anything — those
+        beliefs describe the pre-crash incarnation and would otherwise
+        dedupe the re-dissemination c now needs."""
+        self.incarnation[c] += 1
+        self.rejoined_at[c] = t
+        self.note_crash(c)
+        for x in range(len(self.neighbors)):
+            known = self.peer_has[x].get(c)
+            if known:
+                known.clear()
+
     def _targets(self, c: int, key: ModelKey, version: int, t: float,
                  exclude: int = -1) -> List[int]:
         """Neighbors that (as far as c knows) still need (key, version).
@@ -113,7 +154,7 @@ class GossipProtocol:
         out = [dst for dst in self.neighbors[c]
                if dst != exclude and key not in self.peer_has[c].get(dst,
                                                                      ())]
-        if self.churn is not None and self.churn.departed(key[0], t):
+        if self.owner_gone(key[0], t):
             self.stats.n_suppressed += len(out)
             return []
         if self.cfg.fanout and len(out) > self.cfg.fanout:
@@ -166,8 +207,14 @@ class GossipProtocol:
 
     # ---- protocol events ---------------------------------------------
     def on_local(self, c: int, key: ModelKey, t: float,
-                 version: int = 0) -> List[Tuple[int, ModelKey]]:
-        """Client c produced (trained) a model: record and push."""
+                 version: Optional[int] = None
+                 ) -> List[Tuple[int, ModelKey]]:
+        """Client c produced (trained, or re-admitted after a restart) a
+        model: record and push. The version defaults to c's current
+        incarnation — 0 for the fault-free lifetime, bumped past every
+        previously-shipped copy after each rejoin."""
+        if version is None:
+            version = self.incarnation[c]
         self.have[c][key] = version
         return [(dst, key) for dst in self._targets(c, key, version, t)]
 
@@ -191,8 +238,7 @@ class GossipProtocol:
             known_at_src = self.peer_has[c].setdefault(src, set())
             for other in sorted(self.have[c]):
                 if other != key and other not in known_at_src:
-                    if self.churn is not None and \
-                            self.churn.departed(other[0], t):
+                    if self.owner_gone(other[0], t):
                         self.stats.n_suppressed += 1
                         continue
                     forwards.append((src, other))

@@ -137,29 +137,38 @@ class AntiEntropyRepair:
         self.metrics = NULL_METRICS  # live series (DESIGN.md §11)
 
     # ---- digest emission (sender side) --------------------------------
-    def poll(self, src: int, dst: int, t: float):
+    def poll(self, src: int, dst: int, t: float,
+             sender_online: Optional[bool] = None):
         """The (src -> dst) digest tick fired. Returns (entries, rnd,
         nbytes, reschedule): `entries` is None when no digest goes out
         this tick — a merely-offline sender keeps the stream alive
         (reschedule=True), while a quiesced / round-capped stream or a
         departed destination ends it (reschedule=False; `wake` re-arms
-        quiesced edges)."""
+        quiesced edges).
+
+        `sender_online` lets the scheduler compose extra availability
+        gates (crash downtime, a partitioned edge) with churn: when
+        given, it REPLACES the churn online check — an unavailable tick
+        still consumes a round, so even an infinite partition cannot
+        keep a stream alive forever."""
         edge = (src, dst)
         ended = (self.rounds[edge] >= self.cfg.max_rounds
                  or self.calm[edge] >= self.cfg.quiesce_after
-                 or (self.churn is not None
-                     and (self.churn.departed(dst, t)
-                          or self.churn.departed(src, t))))
+                 or self.gossip.owner_gone(dst, t, churn=self.churn)
+                 or self.gossip.owner_gone(src, t, churn=self.churn))
         if ended:
             self.active.discard(edge)
             return None, 0, 0, False
         rnd = self.rounds[edge]
         self.rounds[edge] = rnd + 1
-        if self.churn is not None and not self.churn.is_online(src, t):
-            # an offline tick still consumes a round: max_rounds bounds
-            # TICKS, not successful sends, otherwise a churn-flapping
-            # sender would keep its stream alive forever (the event loop
-            # only terminates because every stream is tick-bounded)
+        online = (self.churn is None or self.churn.is_online(src, t)) \
+            if sender_online is None else sender_online
+        if not online:
+            # an unavailable tick still consumes a round: max_rounds
+            # bounds TICKS, not successful sends, otherwise a
+            # churn-flapping sender would keep its stream alive forever
+            # (the event loop only terminates because every stream is
+            # tick-bounded)
             return None, 0, 0, True
         entries = tuple(sorted(self.gossip.have[src].items()))
         nb = digest_nbytes(len(entries), self.cfg.bytes_per_entry)
@@ -184,8 +193,8 @@ class AntiEntropyRepair:
         ph = self.gossip.peer_has[c].setdefault(src, set())
         ph.update(remote)
         wants = any(ver > self.gossip.have[c].get(key, -1)
-                    and not (self.churn is not None
-                             and self.churn.departed(key[0], t))
+                    and not self.gossip.owner_gone(key[0], t,
+                                                   churn=self.churn)
                     for key, ver in remote.items())
         # ^ departed owners' keys are unrepairable by design (the gap
         #   loop below skips them too) — they must not hold edges open
@@ -211,7 +220,7 @@ class AntiEntropyRepair:
                 # A receiver-offline loss re-arms this edge via `wake`.
                 self.stats.n_inflight_skipped += 1
                 continue
-            if self.churn is not None and self.churn.departed(key[0], t):
+            if self.gossip.owner_gone(key[0], t, churn=self.churn):
                 continue  # stale owner: gossip suppresses, so does repair
             gaps.append((key, ver))
         edge = (src, c)  # the digest stream that produced this receipt
@@ -286,6 +295,22 @@ class AntiEntropyRepair:
         }
 
     # ---- re-arming ----------------------------------------------------
+    def rearm(self, a: int, b: int) -> bool:
+        """Force the (a -> b) digest stream back to life — the heal
+        handler's sweep over previously-partitioned edges. Returns True
+        when the caller must schedule a fresh digest_send tick (the
+        stream had ended); resetting calm alone is not enough, because a
+        stream that quiesced DURING the cut has no future tick on the
+        heap."""
+        edge = (a, b)
+        if edge not in self.rounds:
+            return False
+        self.calm[edge] = 0
+        if edge in self.active or self.rounds[edge] >= self.cfg.max_rounds:
+            return False
+        self.active.add(edge)
+        return True
+
     def wake(self, c: int, t: float) -> List[int]:
         """Client c admitted a new model: reset its outgoing edges' calm
         counters and return the destinations whose (ended) digest streams
@@ -298,7 +323,7 @@ class AntiEntropyRepair:
                 continue
             if self.rounds[edge] >= self.cfg.max_rounds:
                 continue
-            if self.churn is not None and self.churn.departed(dst, t):
+            if self.gossip.owner_gone(dst, t, churn=self.churn):
                 continue
             self.active.add(edge)
             out.append(dst)

@@ -84,6 +84,10 @@ class TransportStats:
     bytes_sent: int = 0             # bytes that actually crossed the wire
     bytes_delivered: int = 0
     bytes_rejected: int = 0         # inbox-rejected bytes: never on the wire
+    # wire-corruption outcomes (repro.faults): booked by the scheduler at
+    # delivery when a corruption injector is active, zero otherwise
+    n_corrupt_detected: int = 0     # checksum caught it; delivery discarded
+    n_corrupt_admitted: int = 0     # corrupted payload reached the receiver
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

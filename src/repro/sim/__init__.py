@@ -17,12 +17,12 @@ from repro.sim.compat import fedpae_config, spec_from_fedpae
 from repro.sim.experiment import Experiment, RunResult
 from repro.sim.registry import known, register, resolve
 from repro.sim.spec import (ComponentSpec, DataSpec, ExperimentSpec,
-                            NetworkSpec, ObsSpec, ScheduleSpec,
+                            FaultSpec, NetworkSpec, ObsSpec, ScheduleSpec,
                             SelectionSpec, TrainSpec)
 
 __all__ = [
     "ComponentSpec", "DataSpec", "Experiment", "ExperimentSpec",
-    "NetworkSpec", "ObsSpec", "RunResult", "ScheduleSpec",
+    "FaultSpec", "NetworkSpec", "ObsSpec", "RunResult", "ScheduleSpec",
     "SelectionSpec", "TrainSpec", "fedpae_config", "known", "register",
     "resolve", "spec_from_fedpae",
 ]

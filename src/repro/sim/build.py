@@ -142,6 +142,61 @@ def _backend_compiled(params: dict, ctx: dict):
     return run
 
 
+# ---- fault injectors + admission (DESIGN.md §12) ----------------------
+# Imported lazily inside the builders: repro.faults pulls numpy-heavy
+# poisoning code no fault-free run needs at import time.
+
+
+@register("fault", "byzantine")
+def _fault_byzantine(params: dict, ctx: dict):
+    from repro.faults import ByzantineFault
+    return ByzantineFault.from_params(params, ctx["n_clients"])
+
+
+@register("fault", "corruption")
+def _fault_corruption(params: dict, ctx: dict):
+    from repro.faults import CorruptionFault
+    return CorruptionFault.from_params(params, ctx["n_clients"])
+
+
+@register("fault", "crash_restart")
+def _fault_crash_restart(params: dict, ctx: dict):
+    from repro.faults import CrashRestartFault
+    return CrashRestartFault.from_params(params, ctx["n_clients"])
+
+
+@register("fault", "partition")
+def _fault_partition(params: dict, ctx: dict):
+    from repro.faults import PartitionFault
+    return PartitionFault.from_params(params, ctx["n_clients"])
+
+
+@register("admission", "validation_gate")
+def _admission_validation_gate(params: dict, ctx: dict):
+    """Returns the CONFIG, not the controller: the gates need the built
+    stores (labels, class counts), which only the experiment driver
+    holds — it wraps this in an AdmissionController."""
+    from repro.faults import AdmissionConfig
+    from repro.p2p.params import config_from_params
+    return config_from_params(AdmissionConfig, params,
+                              "admission[validation_gate]")
+
+
+def build_faults(spec: ExperimentSpec, n_clients: int):
+    """Aggregate the spec's fault injectors into one FaultController
+    (None when no injectors are declared). `FaultSpec.seed` overrides the
+    experiment seed for every injector whose params omit one."""
+    fa = spec.faults
+    if not fa.injectors:
+        return None
+    from repro.faults import FaultController
+    base = fa.seed if fa.seed is not None else spec.seed
+    ctx = {"n_clients": n_clients, "seed": base, "spec": spec}
+    injectors = [build_component("fault", _seeded(cs, base), ctx)
+                 for cs in fa.injectors]
+    return FaultController(injectors, n_clients)
+
+
 # ---- observability sinks ------------------------------------------------
 # The builders live in repro.obs.probes (which must stay importable from
 # the p2p/core layers without touching repro.sim); registration happens

@@ -573,6 +573,8 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
             "bytes_delivered": delivered_m * W.nb
             + rc_tot.get("dig_bytes_recv", 0),
             "bytes_rejected": 0,
+            "n_corrupt_detected": 0,
+            "n_corrupt_admitted": 0,
         },
         "gossip": {"n_accepted": cnt_tot["acc"], "n_dedup": dedup,
                    "n_suppressed": cnt_tot["supp"], "n_pull": 0},
@@ -626,6 +628,14 @@ def run_compiled(exp, *, tick: Optional[float] = None,
             "(select events are event-granular): set "
             "schedule.select_during_run=False or "
             "selection.enabled=False")
+    if getattr(exp, "faults", None) is not None:
+        exp.faults.array_params()  # always raises, naming active kinds
+    if getattr(exp, "admission", None) is not None:
+        raise ValueError(
+            "the compiled backend does not support validation-gated "
+            "admission (screening happens per store add, which the "
+            "array world does not perform); use schedule.backend="
+            "'event'")
     n, mpc = data.n_clients, exp.models_per_client
     acfg = AsyncConfig(
         n_clients=n, models_per_client=mpc,

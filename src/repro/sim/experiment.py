@@ -32,8 +32,9 @@ from repro.fl.client import accuracy
 from repro.fl.scheduler import AsyncConfig, AsyncTrace, simulate_async
 from repro.obs.metrics import json_ready
 from repro.obs.probes import attach_metrics, finalize_run, make_obs
-from repro.sim.build import (build_client_datasets, build_network,
-                             build_prediction_world, build_world_stores)
+from repro.sim.build import (_seeded, build_client_datasets, build_faults,
+                             build_network, build_prediction_world,
+                             build_world_stores)
 from repro.sim.compat import fedpae_config
 from repro.sim.spec import ExperimentSpec
 
@@ -125,6 +126,8 @@ class Experiment:
         self.churn = churn
         self.repair = repair
         self.train_cost = train_cost
+        self.faults = None           # repro.faults.FaultController (or None)
+        self.admission = None        # repro.faults.AdmissionController
         self.obs = None              # repro.obs.Obs once built (or None)
         self._sinks: list = []
         self._injected = {"transport": transport, "gossip": gossip,
@@ -209,6 +212,12 @@ class Experiment:
                 "per-event slices, which the "
                 f"{'sync driver' if sync else 'compiled array world'} "
                 "does not produce")
+        if sync and spec.faults.enabled:
+            raise ValueError(
+                'schedule.mode="sync" cannot honor the faults section: '
+                "fault injection (and validation-gated admission) drives "
+                "the asynchronous event loop — switch to "
+                'schedule.mode="async" or drop spec.faults')
         if sync and data.kind not in _IMAGE_KINDS:
             raise ValueError(
                 f'schedule.mode="sync" needs image datasets '
@@ -269,6 +278,31 @@ class Experiment:
             for slot in ("transport", "gossip", "churn", "repair",
                          "train_cost"):
                 setattr(self, slot, net[slot])
+            if spec.faults.injectors:
+                self.faults = build_faults(spec, data.n_clients)
+            if self.faults is not None \
+                    and self.faults.byzantine is not None \
+                    and self.stores is None:
+                raise ValueError(
+                    "the byzantine injector poisons prediction matrices, "
+                    f"but data.kind={data.kind!r} builds no stores — "
+                    "silently injecting nothing would report a clean run "
+                    "as an attacked one")
+            if spec.faults.admission is not None:
+                if self.stores is None:
+                    raise ValueError(
+                        "the admission gate screens against local "
+                        "validation labels, but data.kind="
+                        f"{data.kind!r} builds no stores")
+                from repro.faults import AdmissionController
+                from repro.sim.registry import build as build_component
+                fseed = (spec.faults.seed if spec.faults.seed is not None
+                         else spec.seed)
+                adm_cfg = build_component(
+                    "admission", _seeded(spec.faults.admission, fseed),
+                    {"n_clients": data.n_clients, "seed": fseed,
+                     "spec": spec})
+                self.admission = AdmissionController(adm_cfg, self.stores)
         if self.obs is not None:
             # repoint the instrumented subsystems' NULL_METRICS defaults
             # at the run's live registry
@@ -362,27 +396,83 @@ class Experiment:
             seed=sched.seed if sched.seed is not None else spec.seed)
 
         on_add = None
+        faults, adm = self.faults, self.admission
+        chaos = faults is not None or adm is not None
+        base_entry = None
         if data.kind in _IMAGE_KINDS:
             from repro.core.fedpae import _make_entry
             families = spec.train.families
             models, ccfg, F = self.models, self.ccfg, len(families)
 
-            def on_add(c, model_key, t):
-                owner, m = model_key
-                stores[c].add(_make_entry(owner, families[m], m, models,
-                                          ccfg, F), t=t)
+            if not chaos:
+                def on_add(c, model_key, t):
+                    owner, m = model_key
+                    stores[c].add(_make_entry(owner, families[m], m,
+                                              models, ccfg, F), t=t)
+            else:
+                def base_entry(c, model_key):
+                    owner, m = model_key
+                    entry = _make_entry(owner, families[m], m, models,
+                                        ccfg, F)
+                    return entry, entry.predict(stores[c].x_val)
         elif data.kind == "prediction_world":
             _, mats = self.world
             C = data.n_classes
 
+            if not chaos:
+                def on_add(c, model_key, t):
+                    owner, m = model_key
+                    gid = owner * mpc + m
+                    stores[c].add(
+                        BenchEntry(model_id=gid, owner=owner,
+                                   family=f"f{m}",
+                                   predict=lambda x: np.full(
+                                       (len(x), C), 1.0 / C, np.float32)),
+                        preds=mats[(c, gid)], t=t)
+            else:
+                def base_entry(c, model_key):
+                    owner, m = model_key
+                    gid = owner * mpc + m
+                    entry = BenchEntry(
+                        model_id=gid, owner=owner, family=f"f{m}",
+                        predict=lambda x: np.full((len(x), C), 1.0 / C,
+                                                  np.float32))
+                    return entry, mats[(c, gid)]
+        if chaos and base_entry is not None:
+            # the fault-aware gossip -> store path: poison byzantine
+            # payloads (and their test-time forwards), decode
+            # corrupt-admitted deliveries as garbage, screen remote
+            # arrivals through the validation gate
             def on_add(c, model_key, t):
-                owner, m = model_key
-                gid = owner * mpc + m
-                stores[c].add(
-                    BenchEntry(model_id=gid, owner=owner, family=f"f{m}",
-                               predict=lambda x: np.full(
-                                   (len(x), C), 1.0 / C, np.float32)),
-                    preds=mats[(c, gid)], t=t)
+                entry, preds = base_entry(c, model_key)
+                owner, gid = entry.owner, entry.model_id
+                if faults is not None and owner != c:
+                    if faults.is_byzantine(owner):
+                        preds = faults.poison_payload(preds, c, gid)
+                        # serving this entry must yield the poisoned
+                        # outputs too: wrap the forward and strip the raw
+                        # params so the batched family path — which would
+                        # serve TRUE outputs — never picks it up
+                        entry = dataclasses.replace(
+                            entry, params=None, ccfg=None,
+                            predict=lambda x, f=entry.predict, cc=c,
+                            g=gid: faults.poison_matrix(f(x), cc, g))
+                    if faults.take_corrupt(c, model_key):
+                        preds = faults.corrupt_matrix(preds, c, gid)
+                if adm is not None and owner != c:
+                    if adm.screen(c, gid, preds, stores[c]) != "admitted":
+                        return
+                stores[c].add(entry, preds=preds, t=t)
+
+        on_crash_cb = None
+        if faults is not None:
+            def on_crash_cb(c, t):
+                # the bench wipe happened in the scheduler; mirror it in
+                # the volatile driver state (store slots, quarantine pen)
+                if stores is not None:
+                    stores[c].wipe()
+                if adm is not None:
+                    adm.on_crash(c)
 
         curve: List[tuple] = []
         latest: Dict[int, float] = {}
@@ -402,7 +492,11 @@ class Experiment:
             acfg, self.neighbors, train_cost=self.train_cost,
             on_add=on_add, on_select_batch=on_select_batch,
             transport=self.transport, gossip=self.gossip,
-            churn=self.churn, repair=self.repair, obs=self.obs)
+            churn=self.churn, repair=self.repair, faults=faults,
+            on_crash=on_crash_cb, obs=self.obs)
+        if adm is not None:
+            trace.net = dict(trace.net or {})
+            trace.net["admission"] = adm.as_dict()
 
         finals = [s[-1][1] if s else 0
                   for s in trace.bench_sizes.values()]

@@ -24,7 +24,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Tuple
 
 KINDS = ("transport", "gossip", "churn", "repair", "train_cost", "sizer",
-         "backend", "sink")
+         "backend", "sink", "fault", "admission")
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {k: {} for k in KINDS}
 

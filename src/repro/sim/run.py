@@ -66,8 +66,23 @@ def main(argv=None) -> int:
                          "this path (async event backend only)")
     args = ap.parse_args(argv)
 
-    with open(args.spec) as f:
-        raw = json.load(f)
+    # config errors exit 2 with ONE line naming the file and the
+    # offending field — a sweep harness greps stderr, it never wants a
+    # traceback for a typo'd spec
+    try:
+        with open(args.spec) as f:
+            raw = json.load(f)
+    except OSError as e:
+        print(f"error: {args.spec}: {e.strerror or e}", file=sys.stderr)
+        return 2
+    except json.JSONDecodeError as e:
+        print(f"error: {args.spec}: invalid JSON at line {e.lineno} "
+              f"column {e.colno}: {e.msg}", file=sys.stderr)
+        return 2
+    if not isinstance(raw, dict):
+        print(f"error: {args.spec}: expected one ExperimentSpec object, "
+              f"got {type(raw).__name__}", file=sys.stderr)
+        return 2
     smoke = raw.pop("smoke_overrides", {})
     if args.smoke:
         for path, value in smoke.items():
@@ -95,8 +110,16 @@ def main(argv=None) -> int:
                           "params": {"path": args.trace_out}})
         obs["sinks"] = sinks
 
-    spec = ExperimentSpec.from_dict(raw)
-    result = Experiment.from_spec(spec).run()
+    # build() is still configuration: component params are validated by
+    # the registry builders, so a typo'd injector/transport param
+    # surfaces here, not at parse time
+    try:
+        spec = ExperimentSpec.from_dict(raw)
+        exp = Experiment.from_spec(spec).build()
+    except (TypeError, ValueError) as e:
+        print(f"error: {args.spec}: {e}", file=sys.stderr)
+        return 2
+    result = exp.run()
     summary = result.summary()
     # summary() is json_ready: allow_nan=False proves no bare NaN/Inf
     # tokens can reach a consumer's strict JSON parser

@@ -22,6 +22,10 @@ scenario. Five sections mirror the five things a run needs:
   ObsSpec        — observability (DESIGN.md §11): the metrics registry,
                    optional Perfetto trace collection, and tagged output
                    sinks; disabled by default with a true no-op path.
+  FaultSpec      — fault injection (DESIGN.md §12): tagged injector
+                   components (kind "fault") plus an optional
+                   validation-gated admission layer (kind "admission");
+                   empty by default with a byte-identical no-fault path.
 
 Seed-completeness: `ExperimentSpec.seed` is the ONE knob; every section
 and component whose params omit a `seed` inherits it at build time, so
@@ -225,6 +229,35 @@ class ObsSpec:
 
 
 @dataclasses.dataclass
+class FaultSpec:
+    """Fault injection + graceful degradation (DESIGN.md §12). Empty by
+    default — a spec without (or with an empty) `faults` section takes
+    the scheduler's fault-free paths byte-identically.
+
+    `injectors` are tagged components of registry kind "fault"
+    ("byzantine", "corruption", "crash_restart", "partition" — at most
+    one of each); `admission` optionally names a kind-"admission"
+    component ("validation_gate") screening remote payloads before they
+    enter the selection pool. `seed` defaults to the experiment seed
+    (seed-completeness: fault schedules are pure functions of it).
+    Faults drive the asynchronous event loop: sync runs and the compiled
+    backend reject them loudly."""
+    injectors: tuple = ()
+    admission: Optional[ComponentSpec] = None
+    seed: Optional[int] = None            # None -> ExperimentSpec.seed
+
+    def __post_init__(self):
+        self.injectors = tuple(ComponentSpec.of(i, "faults.injectors")
+                               for i in self.injectors)
+        self.admission = ComponentSpec.of(self.admission,
+                                          "faults.admission")
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.injectors) or self.admission is not None
+
+
+@dataclasses.dataclass
 class ExperimentSpec:
     """The one declarative description of a run. Build and execute it
     with `repro.sim.Experiment.from_spec(spec).run()`."""
@@ -235,6 +268,7 @@ class ExperimentSpec:
     network: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
     schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     seed: int = 0
 
     # ---- serialization ------------------------------------------------
@@ -250,7 +284,8 @@ class ExperimentSpec:
         _check_keys(cls, d, "spec")
         sections = {"data": DataSpec, "train": TrainSpec,
                     "selection": SelectionSpec, "network": NetworkSpec,
-                    "schedule": ScheduleSpec, "obs": ObsSpec}
+                    "schedule": ScheduleSpec, "obs": ObsSpec,
+                    "faults": FaultSpec}
         kw = {}
         for name, scls in sections.items():
             sub = d.get(name)
