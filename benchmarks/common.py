@@ -1,12 +1,11 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.data import dirichlet_partition, make_synthetic_images, split_train_val_test
 from repro.fl.client import ClientData
+from repro.obs.metrics import Stopwatch
 
 
 def make_clients(n_clients, alpha, n_samples, n_classes, size=10, seed=0):
@@ -22,11 +21,10 @@ def make_clients(n_clients, alpha, n_samples, n_classes, size=10, seed=0):
 
 def timed(fn, *args, repeat=3, **kw):
     fn(*args, **kw)  # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(repeat):
-        out = fn(*args, **kw)
-    dt = (time.perf_counter() - t0) / repeat
-    return out, dt
+    with Stopwatch() as sw:
+        for _ in range(repeat):
+            out = fn(*args, **kw)
+    return out, sw.total / repeat
 
 
 ROWS = []  # every row() call lands here; run.py can dump them as JSON

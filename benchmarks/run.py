@@ -7,9 +7,10 @@ reduced sizes so the whole suite finishes on one CPU core.
 from __future__ import annotations
 
 import gc
-import time
 
 import numpy as np
+
+from repro.obs.metrics import Stopwatch
 
 
 def bench_table1_accuracy():
@@ -33,10 +34,10 @@ def bench_table1_accuracy():
     fl = FLConfig(rounds=40, local_steps=2,
                   families=spec.train.families, width=12)
     exp.prepare_data()  # data generation stays OUTSIDE the timed region
-    t0 = time.perf_counter()
+    sw = Stopwatch().start()
     local_acc = exp.local_ensemble()
     res = exp.run()
-    t_fedpae = (time.perf_counter() - t0) * 1e6
+    t_fedpae = sw.stop() * 1e6
     accs = {"local": local_acc.mean(), "fedpae": res.test_acc.mean()}
     for m in ("fedavg", "lg_fedavg"):
         accs[m] = BASELINES[m](exp.datasets, 8, fl).mean()
@@ -69,10 +70,10 @@ def bench_table3_scalability():
         schedule=ScheduleSpec(mode="sync"), seed=0)
     exp = Experiment.from_spec(spec)
     exp.prepare_data()  # data generation stays OUTSIDE the timed region
-    t0 = time.perf_counter()
+    sw = Stopwatch().start()
     local_acc = exp.local_ensemble()
     res = exp.run()
-    row("table3_scalability", (time.perf_counter() - t0) * 1e6,
+    row("table3_scalability", sw.stop() * 1e6,
         f"clients=8 local={local_acc.mean():.3f} fedpae={res.test_acc.mean():.3f}")
 
 
@@ -230,9 +231,9 @@ def bench_gossip_scale():
             seed=0)
         exp = Experiment.from_spec(spec)
         exp.build()  # world + stores + p2p stack outside the timer —
-        t0 = time.perf_counter()  # the row times the simulation itself
+        sw = Stopwatch().start()  # the row times the simulation itself
         res = exp.run()
-        dt_sim = time.perf_counter() - t0
+        dt_sim = sw.stop()
         evictions = sum(s.evictions for s in res.stores)
         tstats = res.net["transport"]
         pred_bytes = tstats["bytes_sent"]
@@ -291,9 +292,9 @@ def bench_lossy_repair():
                     train_cost=ComponentSpec(
                         "affine", {"base": 1.0, "slope": 0.2})),
                 seed=0)
-            t0 = time.perf_counter()
+            sw = Stopwatch().start()
             res = Experiment.from_spec(spec).run()
-            dt[with_repair] = time.perf_counter() - t0
+            dt[with_repair] = sw.stop()
             covs[with_repair] = res.coverage
             nets[with_repair] = res.net
         rs = nets[True]["repair"]
@@ -355,9 +356,9 @@ def bench_faults(smoke: bool = False):
         spec = fault_spec(faults)
         exp = Experiment.from_spec(spec)
         exp.build()
-        t0 = time.perf_counter()
+        sw = Stopwatch().start()
         res = exp.run()
-        dt = time.perf_counter() - t0
+        dt = sw.stop()
         row(name, dt * 1e6, derive(res))
 
     run("faults_crash_N16",
@@ -456,20 +457,24 @@ def bench_select_incremental(smoke: bool = False):
         st_inc, st_re, tot_inc, tot_re = [], [], [], []
         for _ in range(reps):
             touch(stores, rng, frac)
-            t0 = time.perf_counter()          # incremental state update
+            sw = Stopwatch()
+            sw.start()                         # incremental state update
             dev.flush()
             jax.block_until_ready(dev.S)
-            t1 = time.perf_counter()          # + GA on cached stats
+            d_flush = sw.stop()
+            sw.start()                         # + GA on cached stats
             eng_inc.select()
-            t2 = time.perf_counter()          # restack state update
+            d_select = sw.stop()
+            sw.start()                         # restack state update
             restack_state(stores, dev.v_max)
-            t3 = time.perf_counter()          # full restack select
+            d_restack = sw.stop()
+            sw.start()                         # full restack select
             eng_re.select()
-            t4 = time.perf_counter()
-            st_inc.append(t1 - t0)
-            tot_inc.append(t2 - t0)
-            st_re.append(t3 - t2)
-            tot_re.append(t4 - t3)
+            d_reselect = sw.stop()
+            st_inc.append(d_flush)
+            tot_inc.append(d_flush + d_select)
+            st_re.append(d_restack)
+            tot_re.append(d_reselect)
         agree = all(np.array_equal(eng_inc.results[c]["chromosome"],
                                    eng_re.results[c]["chromosome"])
                     for c in range(n))
@@ -535,9 +540,9 @@ def bench_simloop(smoke: bool = False):
         exp = Experiment.from_spec(spec)
         exp.build()
         gc.collect()
-        t0 = time.perf_counter()
+        sw = Stopwatch().start()
         r = exp.run()
-        dt = time.perf_counter() - t0
+        dt = sw.stop()
         out = {k: fn(r) for k, fn in keep}
         del r, exp
         return dt, out
@@ -595,9 +600,9 @@ def bench_simloop(smoke: bool = False):
     exp = Experiment.from_spec(simloop_spec(
         10_000, "compiled", {"tick": 0.5, "chunk_ticks": 16}, 8))
     exp.build()
-    t0 = time.perf_counter()
+    sw = Stopwatch().start()
     r = exp.run()
-    dt = time.perf_counter() - t0
+    dt = sw.stop()
     row("simloop_compiled_N10000", dt * 1e6,
         f"coverage={r.coverage:.4f} t_full={r.t_full:.4f} "
         f"msgs={r.net['transport']['n_sent']} "
@@ -671,7 +676,7 @@ def main(smoke: bool = False, json_path: str = None,
         import json
         from benchmarks.common import ROWS
         with open(json_path, "w") as f:
-            json.dump(ROWS, f, indent=2)
+            json.dump(ROWS, f, indent=2, allow_nan=False)
         print(f"# wrote {len(ROWS)} rows to {json_path}")
 
 

@@ -52,7 +52,7 @@ def run_grid(full=False, alphas=None, rounds=None, out="results/table1.json",
                     for m in METHODS if m in results[key]), flush=True)
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
-        json.dump(results, f, indent=1)
+        json.dump(results, f, indent=1, allow_nan=False)
     return results
 
 

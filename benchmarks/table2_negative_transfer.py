@@ -122,7 +122,7 @@ def main(argv=None):
         if d:
             os.makedirs(d, exist_ok=True)
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2)
+            json.dump(rows, f, indent=2, allow_nan=False)
         print(f"# wrote {len(rows)} rows to {args.json}")
     return table
 

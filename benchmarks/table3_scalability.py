@@ -30,7 +30,7 @@ def main(full=False, scale=2, out="results/table3.json"):
         results[m] = BASELINES[m](datasets, n_classes, fl).tolist()
     os.makedirs("results", exist_ok=True)
     with open(out, "w") as f:
-        json.dump(results, f, indent=1)
+        json.dump(results, f, indent=1, allow_nan=False)
     print(f"clients={n_clients}")
     print("method,mean_acc,std")
     for m, a in results.items():

@@ -8,12 +8,11 @@ the reduced benchmark grid.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
 from benchmarks.common import make_clients
+from repro.obs.metrics import Stopwatch
 from repro.configs.paper_cnn import config as paper_config
 from repro.core.fedpae import run_fedpae, run_local_ensemble
 from repro.fl.baselines import BASELINES, FLConfig
@@ -65,15 +64,16 @@ def main(full=False):
     rows = [("fedpae_analytic", fedpae_flops), ("round_based_analytic", round_flops)]
 
     # measured wall-clock on the reduced grid
-    t0 = time.perf_counter()
+    sw = Stopwatch()
+    sw.start()
     local_acc, models, ccfg2 = run_local_ensemble(datasets, n_classes, fp)
-    t_train = time.perf_counter() - t0
-    t0 = time.perf_counter()
+    t_train = sw.stop()
+    sw.start()
     run_fedpae(datasets, n_classes, fp, models=models, ccfg=ccfg2)
-    t_select = time.perf_counter() - t0
-    t0 = time.perf_counter()
+    t_select = sw.stop()
+    sw.start()
     BASELINES["fedavg"](datasets, n_classes, fl)
-    t_fedavg = time.perf_counter() - t0
+    t_fedavg = sw.stop()
 
     print("method,gflops_analytic,runtime_s")
     print(f"fedpae,{fedpae_flops/1e9:.2f},{t_train + t_select:.1f}")

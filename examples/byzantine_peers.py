@@ -35,6 +35,7 @@ import json
 import numpy as np
 
 from repro.fl.client import accuracy
+from repro.obs.metrics import json_ready
 from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
                        FaultSpec, NetworkSpec, ScheduleSpec, SelectionSpec,
                        TrainSpec)
@@ -164,7 +165,7 @@ def main():
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2)
+            json.dump(json_ready(rows), f, indent=2, allow_nan=False)
         print(f"wrote {len(rows)} rows to {args.json}")
     print("\nOK: one argmax on the receiver's own validation set is "
           "enough to hold FedPAE's floor under 30% collusion.")

@@ -34,6 +34,7 @@ import json
 
 import numpy as np
 
+from repro.obs.metrics import json_ready
 from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
                        NetworkSpec, ScheduleSpec, SelectionSpec)
 
@@ -138,7 +139,7 @@ def main():
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2)
+            json.dump(json_ready(rows), f, indent=2, allow_nan=False)
         print(f"wrote {len(rows)} rows to {args.json}")
     print("\nOK: anti-entropy repair turns lossy-link gossip from "
           "best-effort into eventually-complete dissemination.")

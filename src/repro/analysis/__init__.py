@@ -1,0 +1,34 @@
+"""replint: AST-based repo-invariant checker (DESIGN.md §13).
+
+A pluggable static-analysis pass with a rule registry mirroring the sim
+component registry: rules register by id, lint runs yield
+``path:line:col RULE-ID message`` diagnostics, inline comments
+(``# replint: ok[RULE-ID] reason``) suppress individual findings, and
+``--json`` emits the machine-readable report CI uploads.
+
+Shipped rules — each one machine-checks a contract the repo already
+relies on:
+
+  RNG-DET      every RNG derives from an explicit seed expression
+  WALLCLOCK    virtual-time code is wall-clock pure (obs.Stopwatch is
+               the one perf_counter idiom)
+  STRICT-JSON  every json.dump(s) is strict (allow_nan=False or
+               json_ready-routed)
+  REG-STRICT   every sim-registry builder rejects unknown params
+  JIT-HYGIENE  no host-sync Python (casts/.item()/np.asarray/RNG/print)
+               inside jitted functions or lax.scan bodies
+  SET-ITER     no iteration over set values (insertion-order
+               nondeterminism)
+  OBS-PARITY   emitted metric names == the DESIGN.md §11 namespace
+               table (cross-artifact, both directions)
+
+Usage: ``python -m repro.analysis [--strict] [--json report.json]
+src tests examples benchmarks``, or `lint_paths` from Python.
+"""
+from repro.analysis import parity, rules  # noqa: F401  (register rules)
+from repro.analysis.diagnostics import Diagnostic, Suppression
+from repro.analysis.registry import Rule, all_rules, known, resolve, rule
+from repro.analysis.runner import Report, lint_paths
+
+__all__ = ["Diagnostic", "Suppression", "Rule", "rule", "known",
+           "resolve", "all_rules", "Report", "lint_paths"]

@@ -1,0 +1,5 @@
+"""``python -m repro.analysis`` — the replint entry point."""
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

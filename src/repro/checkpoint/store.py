@@ -67,7 +67,8 @@ def save_pytree(path: str, tree, metadata: dict | None = None):
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten(jax.tree.map(np.asarray, tree))
     if metadata is not None:
-        flat["@meta"] = np.frombuffer(json.dumps(metadata).encode(), np.uint8)
+        flat["@meta"] = np.frombuffer(
+            json.dumps(metadata, allow_nan=False).encode(), np.uint8)
     # atomic write: npz to temp then rename
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
     os.close(fd)

@@ -209,7 +209,7 @@ def run_fedgh(datasets, n_classes, fl: FLConfig):
         return head - lr * jax.grad(loss)(head)
 
     protos_fn = {}
-    for f in set(fams):
+    for f in sorted(set(fams)):
         @jax.jit
         def pf(p, x, y, f=f):
             feats = apply_features(f, p, x)

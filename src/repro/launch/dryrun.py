@@ -6,7 +6,6 @@ import argparse
 import json
 import re
 import sys
-import time
 import traceback
 
 import jax
@@ -20,6 +19,7 @@ from repro.launch.mesh import batch_axes as mesh_batch_axes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, arch_for_shape, input_specs
 from repro.models import transformer as tf
+from repro.obs.metrics import Stopwatch
 from repro.sharding import (cache_shardings, data_shardings, param_shardings,
                             state_shardings)
 
@@ -157,7 +157,7 @@ def _compile_cost(cfg, shape, mesh):
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
             probes: bool = True):
-    t0 = time.time()
+    sw = Stopwatch().start()
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = arch_for_shape(get_config(arch), shape)
@@ -177,7 +177,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
             tag = f"{arch}__{shape_name}__{'mp' if multi_pod else 'sp'}"
             with open(os.path.join(hlo_dir, tag + ".hlo"), "w") as f:
                 f.write(hlo)
-        t_full = time.time()
+        t_compile = sw.peek()
 
         # 2) two shallow UNROLLED probes -> depth-extrapolated flops/bytes/
         #    collectives (exact for depth-linear programs)
@@ -210,8 +210,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
         },
         "collective_bytes_per_device": coll,
         "collective_counts_scan": coll_counts,
-        "compile_seconds": round(t_full - t0, 1),
-        "total_seconds": round(time.time() - t0, 1),
+        "compile_seconds": round(t_compile, 1),
+        "total_seconds": round(sw.peek(), 1),
     }
     return res
 
@@ -246,7 +246,7 @@ def main():
                 try:
                     res = run_one(arch, shape_name, mp, hlo_dir=args.hlo_dir)
                     with open(path, "w") as f:
-                        json.dump(res, f, indent=1)
+                        json.dump(res, f, indent=1, allow_nan=False)
                     fl = res.get("flops_per_device") or res.get("flops_scan_raw") or -1
                     print(f"[ok] {tag} compile={res['compile_seconds']}s "
                           f"flops/dev={fl:.3e} "

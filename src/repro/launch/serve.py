@@ -4,7 +4,6 @@ k-ensemble (logit-mean vote — the paper's inference path at LLM scale).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +12,7 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.launch import steps as steps_mod
 from repro.models import transformer as tf
+from repro.obs.metrics import Stopwatch
 
 
 def serve_batch(cfg, params_list, prompts, gen_len: int = 16,
@@ -63,9 +63,9 @@ def main():
     params_list = [tf.init_params(cfg, jax.random.fold_in(key, i))
                    for i in range(a.ensemble)]
     prompts = jax.random.randint(key, (a.batch, a.prompt_len), 0, cfg.vocab)
-    t0 = time.time()
+    sw = Stopwatch().start()
     toks = serve_batch(cfg, params_list, prompts, a.gen_len)
-    dt = time.time() - t0
+    dt = sw.stop()
     print(f"[serve] arch={a.arch} ensemble={a.ensemble} generated "
           f"{toks.shape} in {dt:.1f}s "
           f"({a.batch*a.gen_len/dt:.1f} tok/s)")

@@ -10,7 +10,6 @@ Checkpoints go through repro.checkpoint (the p2p exchange unit).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ from repro.data import TokenPipeline
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tf
+from repro.obs.metrics import Stopwatch
 from repro.optim import make_optimizer, warmup_cosine
 
 PRESETS = {
@@ -67,7 +67,7 @@ def train(arch: str, preset: str, steps: int, batch: int, seq: int,
     pipe = iter(TokenPipeline(cfg.vocab, batch, seq,
                               n_codebooks=cfg.n_codebooks, seed=seed))
     losses = []
-    t0 = time.time()
+    sw = Stopwatch().start()
     for step in range(steps):
         hb = next(pipe)
         b = {"tokens": jnp.asarray(hb["tokens"]), "labels": jnp.asarray(hb["labels"])}
@@ -77,7 +77,7 @@ def train(arch: str, preset: str, steps: int, batch: int, seq: int,
         params, opt_state, loss = step_fn(params, opt_state, b)
         losses.append(float(loss))
         if step % log_every == 0 or step == steps - 1:
-            dt = time.time() - t0
+            dt = sw.peek()
             tok_s = (step + 1) * batch * seq / max(dt, 1e-9)
             print(f"  step {step:5d} loss {losses[-1]:.4f} "
                   f"({tok_s:.0f} tok/s)", flush=True)

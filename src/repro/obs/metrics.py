@@ -211,6 +211,13 @@ class Stopwatch:
         self._t0 = time.perf_counter()
         return self
 
+    def peek(self) -> float:
+        """Elapsed seconds of the running lap, read WITHOUT stopping
+        (0.0 when no lap is running) — running-total progress lines
+        (launch/train) read this instead of keeping their own
+        perf_counter anchor."""
+        return 0.0 if self._t0 is None else time.perf_counter() - self._t0
+
     def stop(self) -> float:
         dt = time.perf_counter() - self._t0
         self._t0 = None

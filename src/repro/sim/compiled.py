@@ -65,7 +65,6 @@ block counts < 2^29 sends.
 from __future__ import annotations
 
 import math
-import time
 from types import SimpleNamespace
 from typing import Callable, Optional
 
@@ -75,6 +74,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.fl.scheduler import AsyncConfig, train_completions
+from repro.obs.metrics import Stopwatch
 from repro.p2p.transport import edge_rng
 
 INF = np.int32(2**31 - 1)
@@ -473,7 +473,8 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
     `obs` (repro.obs.Obs, optional): when enabled, per-chunk counter
     aggregates are sampled ON THE HOST at each chunk boundary
     (probes.CompiledProbe) — the jitted scan itself stays untouched."""
-    wall0 = time.perf_counter()
+    sw_wall = Stopwatch().start()
+    sw_build, sw_scan = Stopwatch(), Stopwatch()
     W = _make_world(acfg, gossip, transport, churn, repair, tick)
     probe = None
     if obs is not None and getattr(obs, "metrics", None) is not None \
@@ -497,13 +498,12 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
     key_block = min(key_block, W.K)
     blocks = [(lo, min(lo + key_block, W.K))
               for lo in range(0, W.K, key_block)]
-    build_s = scan_s = 0.0
     n_ticks = 0
     have_cols, cnt_tot, rc_tot = [], {}, {}
     swallowed = init_sent = init_drop = 0
     chunk_fns = {}
     for bi, (k_lo, k_hi) in enumerate(blocks):
-        tb = time.perf_counter()
+        sw_build.start()
         state, s0, d0, sw0 = _init_block(W, acfg, train_cost, churn,
                                          gossip, k_lo, k_hi)
         init_sent += s0
@@ -515,8 +515,8 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
         if Kb not in chunk_fns:  # k_lo is traced: equal-width blocks
             chunk_fns[Kb] = _make_chunk_fn(W, chunk_ticks, Kb)
         chunk = chunk_fns[Kb]
-        build_s += time.perf_counter() - tb
-        ts = time.perf_counter()
+        sw_build.stop()
+        sw_scan.start()
         while True:
             nxt = _next_tick(state, W.bits)
             if nxt is None:
@@ -545,7 +545,7 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
                              int((h != int(INF)).sum()), h.size)
         state = jax.tree_util.tree_map(
             lambda x: jax.device_get(x), state)
-        scan_s += time.perf_counter() - ts
+        sw_scan.stop()
         have_cols.append(np.asarray(state["have"]))
         for k, v in state["cnt"].items():
             cnt_tot[k] = cnt_tot.get(k, 0) + int(v)
@@ -592,12 +592,12 @@ def simulate_compiled(acfg: AsyncConfig, train_cost: Callable, *,
             "n_quiesced": rc_tot["quiesced"],
             "bytes_digests": rc_tot["dig_bytes"],
         }
-    wall = time.perf_counter() - wall0
+    wall = sw_wall.stop()
     perf = {"backend": "compiled", "wall_s": round(wall, 6),
             "n_ticks": n_ticks,
             "ticks_per_s": round(n_ticks / max(wall, 1e-9), 1),
-            "phases": {"build_s": round(build_s, 6),
-                       "scan_s": round(scan_s, 6)}}
+            "phases": {"build_s": round(sw_build.total, 6),
+                       "scan_s": round(sw_scan.total, 6)}}
     return {"have_tick": have, "coverage": coverage, "t_full": t_full,
             "net": net, "perf": perf, "tick": W.tick, "n_ticks": n_ticks}
 

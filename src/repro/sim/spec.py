@@ -277,7 +277,8 @@ class ExperimentSpec:
 
     def to_json(self, **kw) -> str:
         kw.setdefault("indent", 2)
-        return json.dumps(self.to_dict(), **kw)
+        return json.dumps(self.to_dict(),
+                          allow_nan=kw.pop("allow_nan", False), **kw)
 
     @classmethod
     def from_dict(cls, d: dict) -> "ExperimentSpec":

@@ -1,0 +1,469 @@
+"""replint (repro.analysis): per-rule fixtures, suppression semantics,
+the --json report schema, OBS-PARITY drift in both directions, and the
+repo-is-self-clean gate.
+
+Every rule gets a positive fixture (fires) and a clean twin (silent) so
+a rule that rots into always-silent or always-firing is caught here,
+not in CI triage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import known, lint_paths, resolve
+from repro.analysis.cli import main as cli_main
+from repro.analysis.diagnostics import (Diagnostic, apply_suppressions,
+                                        parse_suppressions)
+from repro.analysis.parity import doc_metrics, is_metric_name
+from repro.analysis.runner import collect_files
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_src(tmp_path, source, name="mod.py", strict=False, only=None):
+    """Write one fixture module and lint it rooted at tmp_path."""
+    f = tmp_path / name
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return lint_paths([str(f)], root=str(tmp_path), strict=strict,
+                      only=only)
+
+
+def rule_hits(report, rule_id):
+    return [d for d in report.diagnostics if d.rule_id == rule_id]
+
+
+# ---- registry ----------------------------------------------------------
+
+def test_rule_registry_catalog():
+    ids = set(known())
+    assert {"RNG-DET", "WALLCLOCK", "STRICT-JSON", "REG-STRICT",
+            "JIT-HYGIENE", "SET-ITER", "OBS-PARITY"} <= ids
+    assert resolve("RNG-DET").id == "RNG-DET"
+    with pytest.raises(ValueError, match="RNG-DET"):
+        resolve("NO-SUCH-RULE")
+
+
+def test_collect_files_typo_is_loud(tmp_path):
+    with pytest.raises(FileNotFoundError, match="sr"):
+        collect_files([str(tmp_path / "sr")])
+
+
+def test_parse_diagnostic_on_syntax_error(tmp_path):
+    rep = lint_src(tmp_path, "def f(:\n")
+    assert [d.rule_id for d in rep.diagnostics] == ["PARSE"]
+    assert rep.exit_code == 1
+
+
+# ---- RNG-DET -----------------------------------------------------------
+
+def test_rng_det_unseeded_default_rng_fires(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import numpy as np
+        r = np.random.default_rng()
+        """)
+    (d,) = rule_hits(rep, "RNG-DET")
+    assert d.line == 2 and "unseeded" in d.message
+
+
+def test_rng_det_clean_twin_silent(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import numpy as np
+        import random
+        r = np.random.default_rng(123)
+        g = np.random.Generator(np.random.PCG64(7))
+        pr = random.Random(7)
+        """)
+    assert rule_hits(rep, "RNG-DET") == []
+
+
+def test_rng_det_global_state_draws_fire(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import numpy as np
+        import random
+        x = np.random.rand(3)
+        y = random.random()
+        z = random.SystemRandom()
+        """)
+    msgs = [d.message for d in rule_hits(rep, "RNG-DET")]
+    assert len(msgs) == 3
+    assert any("numpy.random.rand" in m for m in msgs)
+    assert any("random.random" in m for m in msgs)
+    assert any("SystemRandom" in m for m in msgs)
+
+
+def test_rng_det_respects_import_aliases(tmp_path):
+    # a local module named `random` is not the stdlib one
+    rep = lint_src(tmp_path, """\
+        from mypkg import random
+        x = random.random()
+        """)
+    assert rule_hits(rep, "RNG-DET") == []
+
+
+# ---- WALLCLOCK ---------------------------------------------------------
+
+def test_wallclock_fires_on_time_and_datetime(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import time
+        from datetime import datetime
+        t0 = time.perf_counter()
+        t1 = time.time()
+        now = datetime.now()
+        """)
+    assert len(rule_hits(rep, "WALLCLOCK")) == 3
+
+
+def test_wallclock_allows_obs_metrics_py(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import time
+        t0 = time.perf_counter()
+        """, name="obs/metrics.py")
+    assert rule_hits(rep, "WALLCLOCK") == []
+
+
+def test_wallclock_clean_twin_silent(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import time
+        time.sleep(0.0)
+        t = time.strptime("2026", "%Y")
+        """)
+    assert rule_hits(rep, "WALLCLOCK") == []
+
+
+# ---- STRICT-JSON -------------------------------------------------------
+
+def test_strict_json_fires_without_allow_nan(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        s = json.dumps({"a": 1})
+        with open("x.json", "w") as f:
+            json.dump({"a": 1}, f)
+        """)
+    assert len(rule_hits(rep, "STRICT-JSON")) == 2
+
+
+def test_strict_json_clean_twin_silent(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        from repro.obs.metrics import json_ready
+        s = json.dumps({"a": 1}, allow_nan=False)
+        t = json.dumps({"a": 1}, allow_nan=kw.pop("allow_nan", False))
+        with open("x.json", "w") as f:
+            json.dump(json_ready(rows), f, indent=2, allow_nan=False)
+        """)
+    assert rule_hits(rep, "STRICT-JSON") == []
+
+
+def test_strict_json_flags_explicit_true(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        s = json.dumps({"a": 1}, allow_nan=True)
+        """)
+    (d,) = rule_hits(rep, "STRICT-JSON")
+    assert d.line == 2
+
+
+# ---- REG-STRICT --------------------------------------------------------
+
+def test_reg_strict_fires_on_unvalidated_builder(tmp_path):
+    rep = lint_src(tmp_path, """\
+        from repro.sim.registry import register
+
+        @register("train_cost", "bad")
+        def build_bad(params, ctx):
+            return params.get("a", 1.0)
+        """)
+    (d,) = rule_hits(rep, "REG-STRICT")
+    assert "build_bad" in d.message
+
+
+def test_reg_strict_validator_forms_silent(tmp_path):
+    rep = lint_src(tmp_path, """\
+        from repro.p2p.params import check_params, config_from_params
+        from repro.sim.registry import register
+
+        @register("train_cost", "ok1")
+        def build_ok1(params, ctx):
+            check_params(params, ("a",), "train_cost[ok1]")
+            return params.get("a", 1.0)
+
+        @register("gossip", "ok2")
+        def build_ok2(params, ctx):
+            return config_from_params(GossipConfig, params, "gossip[ok2]")
+
+        @register("sizer", "ok3")
+        def build_ok3(params, ctx):
+            return SizerConfig.from_params(params)
+
+        def build_ok4(params, ctx):
+            check_params(params, (), "x")
+            return 1
+
+        register("repair", "ok4")(build_ok4)
+        """)
+    assert rule_hits(rep, "REG-STRICT") == []
+
+
+# ---- JIT-HYGIENE -------------------------------------------------------
+
+def test_jit_hygiene_cast_and_print_fire(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def step(params, x):
+            print("tracing", x)
+            return float(x) + 1.0
+        """)
+    msgs = [d.message for d in rule_hits(rep, "JIT-HYGIENE")]
+    assert len(msgs) == 2
+    assert any("float()" in m for m in msgs)
+    assert any("jax.debug.print" in m for m in msgs)
+
+
+def test_jit_hygiene_static_args_exempt(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def step(x, n):
+            return x + int(n)
+        """)
+    assert rule_hits(rep, "JIT-HYGIENE") == []
+
+
+def test_jit_hygiene_lax_scan_body_all_traced(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import jax
+        import numpy as np
+
+        def body(carry, x):
+            return carry + x, np.asarray(x)
+
+        out = jax.lax.scan(body, 0.0, xs)
+        """)
+    (d,) = rule_hits(rep, "JIT-HYGIENE")
+    assert "host" in d.message
+
+
+def test_jit_hygiene_unjitted_function_silent(tmp_path):
+    rep = lint_src(tmp_path, """\
+        def metrics(loss):
+            print(float(loss))
+        """)
+    assert rule_hits(rep, "JIT-HYGIENE") == []
+
+
+# ---- SET-ITER ----------------------------------------------------------
+
+def test_set_iter_fires_on_direct_iteration(tmp_path):
+    rep = lint_src(tmp_path, """\
+        def f(items):
+            s = {x for x in items}
+            for v in s:
+                yield v
+        """)
+    (d,) = rule_hits(rep, "SET-ITER")
+    assert d.line == 3
+
+
+def test_set_iter_sorted_is_silent(tmp_path):
+    rep = lint_src(tmp_path, """\
+        def f(items):
+            s = set(items)
+            for v in sorted(s):
+                yield v
+            n = len(s)
+        """)
+    assert rule_hits(rep, "SET-ITER") == []
+
+
+# ---- suppressions ------------------------------------------------------
+
+def test_suppression_same_line_and_previous_line(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        a = json.dumps({})  # replint: ok[STRICT-JSON] fixture, never read back
+        # replint: ok[STRICT-JSON] fixture, never read back
+        b = json.dumps({})
+        """)
+    assert rep.diagnostics == []
+    assert rep.exit_code == 0
+
+
+def test_suppression_multiple_ids_one_comment(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        import time
+        # replint: ok[STRICT-JSON, WALLCLOCK] fixture exercising both
+        x = json.dumps({"t": time.time()})
+        """)
+    assert rep.diagnostics == []
+
+
+def test_bare_suppression_is_error_but_still_suppresses(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        a = json.dumps({})  # replint: ok[STRICT-JSON]
+        """)
+    assert rule_hits(rep, "STRICT-JSON") == []
+    (d,) = rule_hits(rep, "SUPPRESS-BARE")
+    assert d.severity == "error"
+    assert rep.exit_code == 1
+
+
+def test_unused_suppression_warns_then_errors_under_strict(tmp_path):
+    src = "x = 1  # replint: ok[WALLCLOCK] nothing here actually\n"
+    rep = lint_src(tmp_path, src)
+    (d,) = rule_hits(rep, "SUPPRESS-UNUSED")
+    assert d.severity == "warning" and rep.exit_code == 0
+    rep = lint_src(tmp_path, src, strict=True)
+    (d,) = rule_hits(rep, "SUPPRESS-UNUSED")
+    assert d.severity == "error" and rep.exit_code == 1
+
+
+def test_suppression_inside_string_is_not_parsed():
+    src = 's = "# replint: ok[RNG-DET] not a comment"\n'
+    assert parse_suppressions(src, "m.py") == []
+
+
+def test_apply_suppressions_only_matching_rule_id():
+    d = Diagnostic("m.py", 2, 0, "RNG-DET", "boom")
+    supps = parse_suppressions(
+        "import numpy as np\n"
+        "r = np.random.default_rng()  # replint: ok[WALLCLOCK] wrong id\n",
+        "m.py")
+    out = apply_suppressions([d], {"m.py": supps})
+    assert any(x.rule_id == "RNG-DET" for x in out)          # not eaten
+    assert any(x.rule_id == "SUPPRESS-UNUSED" for x in out)  # and stale
+
+
+# ---- --json report schema ---------------------------------------------
+
+def test_json_report_schema(tmp_path):
+    rep = lint_src(tmp_path, """\
+        import json
+        a = json.dumps({})
+        """)
+    doc = rep.to_dict()
+    assert doc["version"] == 1
+    assert doc["strict"] is False
+    assert "STRICT-JSON" in doc["rules"]
+    assert doc["files_checked"] == 1
+    (entry,) = doc["diagnostics"]
+    assert set(entry) == {"path", "line", "col", "rule", "message",
+                          "severity"}
+    assert entry["rule"] == "STRICT-JSON" and entry["line"] == 2
+    assert doc["summary"] == {"errors": 1, "warnings": 0,
+                              "by_rule": {"STRICT-JSON": 1}}
+    json.dumps(doc, allow_nan=False)  # the report itself is strict
+
+
+def test_diagnostic_format_is_grep_able():
+    d = Diagnostic("src/m.py", 3, 4, "RNG-DET", "unseeded")
+    assert d.format() == "src/m.py:3:4 RNG-DET unseeded"
+
+
+# ---- CLI ---------------------------------------------------------------
+
+def test_cli_exit_codes_and_json(tmp_path, monkeypatch, capsys):
+    (tmp_path / "bad.py").write_text(
+        "import numpy as np\nr = np.random.default_rng()\n")
+    (tmp_path / "good.py").write_text("x = 1\n")
+    monkeypatch.chdir(tmp_path)
+    assert cli_main(["good.py"]) == 0
+    rc = cli_main(["bad.py", "--json", str(tmp_path / "rep.json")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "bad.py:2:4 RNG-DET" in out
+    doc = json.loads((tmp_path / "rep.json").read_text())
+    assert doc["summary"]["by_rule"] == {"RNG-DET": 1}
+    assert cli_main(["--list-rules"]) == 0
+    assert cli_main(["good.py", "--rules", "NOPE"]) == 2
+    assert cli_main(["no_such_dir"]) == 2
+
+
+# ---- OBS-PARITY --------------------------------------------------------
+
+_PROBES = """\
+def publish(mx, state):
+    mx.inc("net.msgs_sent", 1)
+    for name, v in (("net.inbox_depth", state.depth),):
+        mx.set(name, v)
+"""
+
+_DESIGN = """\
+# §11. Observability
+
+| metric | kind | labels | emitted |
+| --- | --- | --- | --- |
+| `net.msgs_sent` | counter | kind | transport |
+| `net.inbox_depth{client=i}` | gauge | client | probes |
+"""
+
+
+def _parity_project(tmp_path, probes=_PROBES, design=_DESIGN):
+    d = tmp_path / "obs"
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "probes.py").write_text(probes)
+    if design is not None:
+        (tmp_path / "DESIGN.md").write_text(design)
+    return lint_paths([str(d)], root=str(tmp_path))
+
+
+def test_obs_parity_in_sync_is_silent(tmp_path):
+    assert _parity_project(tmp_path).diagnostics == []
+
+
+def test_obs_parity_code_not_in_doc(tmp_path):
+    probes = _PROBES + "\n\ndef extra(mx):\n    mx.inc('net.rogue', 1)\n"
+    rep = _parity_project(tmp_path, probes=probes)
+    (d,) = rule_hits(rep, "OBS-PARITY")
+    assert "net.rogue" in d.message and d.path == "obs/probes.py"
+
+
+def test_obs_parity_doc_not_in_code(tmp_path):
+    design = _DESIGN + "| `net.ghost` | counter | - | nowhere |\n"
+    rep = _parity_project(tmp_path, design=design)
+    (d,) = rule_hits(rep, "OBS-PARITY")
+    assert "net.ghost" in d.message and d.path == "DESIGN.md"
+
+
+def test_obs_parity_missing_design_md_is_error(tmp_path):
+    rep = _parity_project(tmp_path, design=None)
+    (d,) = rule_hits(rep, "OBS-PARITY")
+    assert "DESIGN.md" in d.message
+
+
+def test_obs_parity_inactive_without_probes(tmp_path):
+    rep = lint_src(tmp_path, "x = 1\n")
+    assert rule_hits(rep, "OBS-PARITY") == []
+
+
+def test_doc_metrics_strips_label_qualifiers():
+    doc = doc_metrics(_DESIGN)
+    assert set(doc) == {"net.msgs_sent", "net.inbox_depth"}
+
+
+def test_is_metric_name_excludes_file_names():
+    assert is_metric_name("net.msgs_sent")
+    assert not is_metric_name("results.json")
+    assert not is_metric_name("Module.Attr")
+    assert not is_metric_name("flat")
+
+
+# ---- the repo is self-clean -------------------------------------------
+
+def test_repo_passes_strict_lint():
+    paths = [os.path.join(REPO, p)
+             for p in ("src", "tests", "examples", "benchmarks")]
+    rep = lint_paths(paths, root=REPO, strict=True)
+    assert rep.errors == [], "\n".join(d.format() for d in rep.errors)
+    assert rep.warnings == [], \
+        "\n".join(d.format() for d in rep.warnings)

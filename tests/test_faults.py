@@ -427,7 +427,8 @@ def test_cli_exits_2_with_one_line_error(tmp_path, capsys):
         "selection": {"enabled": False},
         "schedule": {"mode": "async"},
         "faults": {"injectors": [{"name": "byzantine",
-                                  "params": {"fractoin": 0.3}}]}}))
+                                  "params": {"fractoin": 0.3}}]}},
+        allow_nan=False))
     rc = cli(["--spec", str(bad_field)])
     err = capsys.readouterr().err
     assert rc == 2 and err.count("\n") == 1 and "fractoin" in err

@@ -118,6 +118,7 @@ def test_stopwatch_accumulates_and_records():
 
 def test_frame_json_roundtrip():
     mx = Metrics()
+    # replint: ok[OBS-PARITY] fixture name for the roundtrip test, not a real series
     mx.inc("net.bytes", 10, t=0.0, kind="model")
     mx.set("coverage.t_full", float("nan"))
     fr = mx.frame(meta={"seed": 1})

@@ -14,6 +14,7 @@ from repro.core.fedpae import (FedPAEConfig, build_benches, build_stores,
 from repro.core.nsga2 import NSGAConfig
 from repro.fl.scheduler import AsyncConfig
 from repro.fl.topology import make_topology
+from repro.p2p.params import check_params
 from repro.p2p import (AntiEntropyRepair, ChurnConfig, ChurnSchedule,
                        GossipConfig, GossipProtocol, GossipTransport,
                        RepairConfig, TransportConfig,
@@ -160,6 +161,7 @@ def test_gossip_mode_in_params_rejected():
 def test_custom_component_registers_by_name():
     @register("train_cost", "quadratic_test_only")
     def _quad(params, ctx):
+        check_params(params, ("a",), "train_cost[quadratic_test_only]")
         a = float(params.get("a", 1.0))
         return lambda c, m: a * (m + 1) ** 2
 
