@@ -1,0 +1,79 @@
+"""CI gate for the online serving subsystem (DESIGN.md §14): the
+drift-recovery claim.
+
+Reads the JSON rows dumped by `examples/serve_drift.py --json` and
+fails (exit 1) unless, under the scheduled label shift on the lossy
+ring:
+
+  1. the monitored arm recovers >= 90% of its pre-drift serving
+     accuracy (the monitor -> re-selection loop closes),
+  2. the frozen control ends >= 5 points below the monitored arm (the
+     drift actually bites — without this the recovery check is
+     vacuous),
+  3. the monitor fired (re-selections > 0) and the frozen control
+     never did (exactly 0), and
+  4. the example's rerun was bit-identical (serving traces are pure
+     functions of the spec seed).
+
+Usage: python benchmarks/check_serve.py BENCH_serve.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+RECOVERY_FLOOR = 0.90
+GAP_FLOOR = 0.05
+
+
+def main(path: str) -> int:
+    rows = {r["name"]: r for r in json.load(open(path))}
+    need = ("serve_monitored", "serve_frozen", "determinism")
+    missing = [n for n in need if n not in rows]
+    if missing:
+        print(f"FAIL: benchmark row(s) {missing} missing from {path}")
+        return 1
+    mon, fro = rows["serve_monitored"], rows["serve_frozen"]
+    recovery = float(mon["recovery"])
+    gap = float(mon["post_acc"]) - float(fro["post_acc"])
+    resel = int(mon["reselections"])
+    print(f"label drift: monitored {mon['pre_acc']:.3f} -> "
+          f"{mon['post_acc']:.3f} (recovery {recovery:.1%}) | frozen "
+          f"-> {fro['post_acc']:.3f} (gap {gap * 100:.1f} pts) | "
+          f"{resel} re-selections, regret {mon['regret']}")
+    if recovery < RECOVERY_FLOOR:
+        print(f"FAIL: monitored arm recovers {recovery:.1%} < "
+              f"{RECOVERY_FLOOR:.0%} of pre-drift serving accuracy")
+        return 1
+    if gap < GAP_FLOOR:
+        print(f"FAIL: frozen control is only {gap * 100:.1f} pts below "
+              f"the monitored arm < {GAP_FLOOR * 100:.0f} — the drift "
+              "is vacuous (seed drift?)")
+        return 1
+    if resel <= 0:
+        print("FAIL: the monitor never triggered a re-selection — the "
+              "loop never closed")
+        return 1
+    if int(fro["reselections"]) != 0:
+        print("FAIL: the frozen control re-selected — monitor=false is "
+              "not a control")
+        return 1
+    if not rows["determinism"].get("identical", False):
+        print("FAIL: the serving run was not bit-identical across "
+              "reruns")
+        return 1
+    curve = sorted((r for n, r in rows.items()
+                    if n.startswith("curve_thr")),
+                   key=lambda r: r["threshold"])
+    if curve:
+        pts = " ".join(f"thr={r['threshold']:.2f}:"
+                       f"{r['reselections']}sel/{r['regret']:.2f}rg"
+                       for r in curve)
+        print(f"regret-vs-compute curve: {pts}")
+    print("OK: accuracy-monitored re-selection recovers the served "
+          "ensemble after drift; the stale control does not")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1]))

@@ -384,6 +384,66 @@ def bench_faults(smoke: bool = False):
                   f"admitted={r.net['transport']['n_corrupt_admitted']}")
 
 
+def bench_serve(smoke: bool = False):
+    """Online serving subsystem (DESIGN.md §14) on prediction worlds:
+    Poisson query traffic + a scheduled label shift + the accuracy
+    monitor, at two fleet sizes. Each row's primary number is the
+    simulation wall time (the query/drift events ride the same loop —
+    a perf canary for the `serving is not None` branches); derived
+    carries the serving telemetry: queries answered, virtual-time
+    p50/p99 query latency, monitor re-selections, and the
+    stale-ensemble regret captured by re-selecting."""
+    from benchmarks.common import row
+    from repro.sim import Experiment, ExperimentSpec
+
+    def serve_spec(n: int) -> ExperimentSpec:
+        return ExperimentSpec.from_dict({
+            "data": {"kind": "prediction_world", "n_clients": n,
+                     "n_classes": 8, "n_val": 64, "models_per_client": 2,
+                     "quality_local": [0.3, 0.5],
+                     "quality_remote": [0.25, 0.55]},
+            "selection": {"enabled": True, "pop_size": 16,
+                          "generations": 4, "k": 3},
+            "network": {"topology": "ring",
+                        "transport": {"name": "gossip",
+                                      "params": {"base_latency": 0.05,
+                                                 "jitter": 1.0,
+                                                 "bandwidth": 50e6,
+                                                 "drop_prob": 0.05,
+                                                 "inbox_capacity": 64}},
+                        "gossip": "push",
+                        "repair": {"name": "anti_entropy",
+                                   "params": {"max_rounds": 60,
+                                              "max_attempts": 8}}},
+            "schedule": {"mode": "async",
+                         "train_cost": {"name": "affine",
+                                        "params": {"base": 1.0,
+                                                   "slope": 0.2}}},
+            "serve": {"traffic": {"name": "poisson",
+                                  "params": {"rate": 20.0, "batch": 8,
+                                             "start": 2.0,
+                                             "duration": 8.0}},
+                      "drift": [{"name": "label_shift",
+                                 "params": {"at": 7.0, "classes": [7],
+                                            "skew": 1.0}}],
+                      "monitor": True, "window": 64,
+                      "threshold": 0.15, "debounce": 1.0},
+            "seed": 0})
+
+    for n in ((16,) if smoke else (16, 64)):
+        exp = Experiment.from_spec(serve_spec(n))
+        exp.build()
+        sw = Stopwatch().start()
+        res = exp.run()
+        dt = sw.stop()
+        sv = res.net["serve"]
+        row(f"serve_drift_N{n}", dt * 1e6,
+            f"queries={sv['n_queries']} "
+            f"lat_p50={sv['latency_p50']:.5f} "
+            f"lat_p99={sv['latency_p99']:.5f} "
+            f"resel={sv['n_reselections']} regret={sv['regret']:.3f}")
+
+
 def bench_select_incremental(smoke: bool = False):
     """Restack vs device-resident incremental select (DESIGN.md §7): the
     same fleet, the same NSGA-II, the same per-client streams — one
@@ -647,7 +707,8 @@ def bench_roofline_summary():
 # single-suite entries runnable in isolation via --only (each accepts
 # the smoke flag); CI runs `--only simloop` as its own gated step so the
 # event-vs-compiled comparison gets a dedicated JSON artifact
-ONLY = {"simloop": bench_simloop, "faults": bench_faults}
+ONLY = {"simloop": bench_simloop, "faults": bench_faults,
+        "serve": bench_serve}
 
 
 def main(smoke: bool = False, json_path: str = None,
@@ -666,6 +727,7 @@ def main(smoke: bool = False, json_path: str = None,
         bench_gossip_scale()
         bench_lossy_repair()
         bench_faults(smoke=smoke)
+        bench_serve(smoke=smoke)
         bench_nsga2_microbench()
         bench_ensemble_fitness_kernel()
         bench_partition_fig4()

@@ -1,0 +1,203 @@
+"""FedPAE online serving under label drift: accuracy-monitored
+re-selection vs a frozen ensemble (DESIGN.md §14).
+
+FedPAE's selection is cheap enough to re-run whenever the served world
+changes — the exchange unit (prediction matrices on the receiver's own
+validation set, §III-A) means re-selection is one NSGA-II pass over
+already-stored matrices, no retraining and no new communication. This
+example measures what that buys at serving time: a lossy-ring fleet
+disseminates, selects, then serves Poisson query traffic; at a virtual
+time AFTER dissemination has completed (so in-run arrival-triggered
+selection is already quiet), a label-shift drift concentrates every
+client's query stream on one class and resamples its validation rows
+to match. Two arms on the identical world and traffic schedule:
+
+  monitored — the serving-accuracy monitor (sliding window vs its own
+              running peak) breaches and schedules debounced
+              re-selections; the fleet re-optimizes for the shifted
+              distribution it is actually serving;
+  frozen    — serve.monitor=false: the same drift hits, but the
+              pre-drift ensembles keep serving (the stale-model
+              control).
+
+Headline (the `benchmarks/check_serve.py` CI gate): the monitored arm
+recovers >= 90% of its pre-drift serving accuracy while the frozen
+control ends >= 5 points below the monitored arm, the monitor actually
+fired (re-selections > 0; the frozen arm has exactly 0), and the
+chaotic arm re-runs bit-identically (traffic, drift, and query draws
+are pure functions of the spec seed). A threshold sweep also records
+the regret-vs-re-selection-compute tradeoff: lower monitor thresholds
+spend more re-selections to capture more of the stale-ensemble regret
+(the integral of live-minus-frozen accuracy over virtual time).
+
+    PYTHONPATH=src python examples/serve_drift.py [--smoke] [--json PATH]
+"""
+import argparse
+import json
+
+import numpy as np
+
+from repro.obs.metrics import json_ready
+from repro.sim import (ComponentSpec, DataSpec, Experiment, ExperimentSpec,
+                       NetworkSpec, ObsSpec, ScheduleSpec, SelectionSpec,
+                       ServeSpec)
+
+DRIFT_CLASS = 7  # NOT class 0: argmax tie-breaks favor low class ids,
+                 # which would flatter the frozen arm on the drifted rows
+
+
+def make_spec(n: int, monitor: bool, threshold: float, drift_at: float,
+              serve_end: float, seed: int = 0) -> ExperimentSpec:
+    return ExperimentSpec(
+        data=DataSpec(kind="prediction_world", n_clients=n, n_classes=8,
+                      n_val=64, models_per_client=3,
+                      quality_local=(0.3, 0.5),
+                      quality_remote=(0.25, 0.55)),
+        selection=SelectionSpec(pop_size=24, generations=8, k=3),
+        network=NetworkSpec(
+            topology="ring",
+            transport=ComponentSpec("gossip", {
+                "base_latency": 0.05, "jitter": 1.0, "bandwidth": 5e7,
+                "drop_prob": 0.1, "inbox_capacity": 64}),
+            gossip="push",
+            repair=ComponentSpec("anti_entropy", {
+                "interval": 1.0, "start": 1.0, "max_rounds": 60,
+                "quiesce_after": 2, "max_attempts": 8})),
+        schedule=ScheduleSpec(
+            mode="async",
+            train_cost=ComponentSpec("affine",
+                                     {"base": 1.0, "slope": 0.2})),
+        obs=ObsSpec(enabled=True),
+        serve=ServeSpec(
+            traffic=ComponentSpec("poisson", {
+                "rate": 60.0, "batch": 8, "start": 2.5,
+                "duration": serve_end - 2.5}),
+            drift=(ComponentSpec("label_shift", {
+                "at": drift_at, "classes": [DRIFT_CLASS],
+                "skew": 1.0}),),
+            monitor=monitor, window=64, threshold=threshold,
+            debounce=0.5),
+        seed=seed)
+
+
+def window_acc_between(res, t0: float, t1: float) -> float:
+    """Mean of the live `serve.window_acc` samples in [t0, t1) — the
+    fleet's warm sliding-window serving accuracy over that span."""
+    samples = [v for t, v in
+               res.metrics.series.get("serve.window_acc", ())
+               if t0 <= t < t1]
+    return float(np.mean(samples)) if samples else float("nan")
+
+
+def run_arm(n, monitor, threshold, drift_at, serve_end, seed=0):
+    res = Experiment.from_spec(
+        make_spec(n, monitor, threshold, drift_at, serve_end,
+                  seed=seed)).run()
+    pre = window_acc_between(res, drift_at - 1.0, drift_at)
+    post = window_acc_between(res, serve_end - 2.0, serve_end)
+    return res, pre, post
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: 6 clients, shorter horizon, "
+                         "2-point threshold sweep")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump rows for benchmarks/check_serve.py")
+    args = ap.parse_args()
+    if args.smoke:
+        n, drift_at, serve_end = 6, 9.5, 14.0
+        sweep = (0.05, 0.25)
+    else:
+        n, drift_at, serve_end = 10, 9.5, 14.5
+        sweep = (0.05, 0.12, 0.25, 0.4)
+    thr = 0.12
+
+    print(f"world: {n} clients x 3 models on a lossy ring (10% drops), "
+          f"poisson queries, label shift -> class {DRIFT_CLASS} "
+          f"at t={drift_at}\n")
+    res_m, pre_m, post_m = run_arm(n, True, thr, drift_at, serve_end)
+    res_f, pre_f, post_f = run_arm(n, False, thr, drift_at, serve_end)
+    sv_m, sv_f = res_m.net["serve"], res_f.net["serve"]
+
+    # the experiment's premise: drift lands after dissemination has
+    # completed, so any post-drift adaptation is the monitor's doing
+    assert res_m.t_full is not None and res_m.t_full < drift_at, \
+        f"dissemination finished at {res_m.t_full}, after the drift at " \
+        f"{drift_at} — arrival-triggered selection would contaminate " \
+        "the frozen control"
+    assert sv_f["n_queries"] == sv_m["n_queries"], \
+        "traffic schedules must be monitor-independent"
+
+    print(f"{'arm':>10} {'pre':>6} {'post':>6} {'resel':>6} "
+          f"{'regret':>8} {'p99 lat':>9}")
+    for name, sv, pre, post in (("monitored", sv_m, pre_m, post_m),
+                                ("frozen", sv_f, pre_f, post_f)):
+        print(f"{name:>10} {pre:6.3f} {post:6.3f} "
+              f"{sv['n_reselections']:6d} {sv['regret']:8.3f} "
+              f"{sv['latency_p99']:9.5f}")
+
+    recovery = post_m / max(pre_m, 1e-9)
+    gap = post_m - post_f
+    print(f"\nmonitored arm recovers {recovery:.1%} of pre-drift serving "
+          f"accuracy; frozen control ends {gap * 100:.1f} pts below it "
+          f"({sv_m['n_reselections']} re-selections, "
+          f"regret {sv_m['regret']:.3f})")
+    assert recovery >= 0.90, \
+        f"monitored arm recovered only {recovery:.1%} of pre-drift acc"
+    assert gap >= 0.05, \
+        f"frozen control is only {gap * 100:.1f} pts below the " \
+        "monitored arm — the drift is vacuous at this seed"
+    assert sv_m["n_reselections"] > 0, "the monitor never fired"
+    assert sv_f["n_reselections"] == 0, \
+        "the frozen control re-selected — monitor=false is broken"
+
+    # -- regret vs re-selection compute: sweep the monitor threshold ----
+    print(f"\n{'threshold':>10} {'resel':>6} {'regret':>8} {'post':>6}")
+    curve = []
+    for t in sweep:
+        if t == thr:
+            res_t, post_t, sv_t = res_m, post_m, sv_m  # reuse the arm
+        else:
+            res_t, _, post_t = run_arm(n, True, t, drift_at, serve_end)
+            sv_t = res_t.net["serve"]
+        curve.append(dict(name=f"curve_thr{int(round(t * 100))}",
+                          threshold=t,
+                          reselections=sv_t["n_reselections"],
+                          regret=sv_t["regret"],
+                          post_acc=round(post_t, 4)))
+        print(f"{t:10.2f} {sv_t['n_reselections']:6d} "
+              f"{sv_t['regret']:8.3f} {post_t:6.3f}")
+
+    # -- determinism: serving is a pure function of the spec seed -------
+    res_r, _, _ = run_arm(n, True, thr, drift_at, serve_end)
+    identical = (res_r.trace.events == res_m.trace.events
+                 and res_r.net == res_m.net)
+    assert identical, "serving run is not bit-identical across reruns"
+    print("\ndeterminism: the monitored arm is bit-identical across "
+          "reruns")
+
+    rows = [
+        dict(name="serve_monitored", pre_acc=round(pre_m, 4),
+             post_acc=round(post_m, 4), recovery=round(recovery, 4),
+             reselections=sv_m["n_reselections"], regret=sv_m["regret"],
+             n_queries=sv_m["n_queries"],
+             latency_p50=sv_m["latency_p50"],
+             latency_p99=sv_m["latency_p99"]),
+        dict(name="serve_frozen", pre_acc=round(pre_f, 4),
+             post_acc=round(post_f, 4),
+             reselections=sv_f["n_reselections"],
+             n_queries=sv_f["n_queries"]),
+        dict(name="determinism", identical=bool(identical)),
+    ] + curve
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_ready(rows), f, indent=2, allow_nan=False)
+        print(f"wrote {len(rows)} rows to {args.json}")
+    print("\nOK: one cheap re-selection pass per breach keeps the served "
+          "ensemble matched to the distribution it is actually asked.")
+
+
+if __name__ == "__main__":
+    main()

@@ -189,6 +189,27 @@ class DeviceStoreBatch:
                           np.float32)
         self.acc = jnp.concatenate([self.acc, jnp.asarray(acc_row)])
 
+    def refresh_labels(self, client: int) -> None:
+        """A store's validation set was replaced in place
+        (`PredictionStore.refresh_validation`): re-upload its label row
+        and mark EVERY slot dirty — including empty ones, whose cached
+        acc seeds (`_zero_row_acc`) depend on the label-0 fraction — so
+        the next flush rebuilds this client's statistics bit-identically
+        to a from-scratch mirror of the refreshed store."""
+        store = self.stores[client]
+        labels = np.array(self.labels)   # device arrays view read-only
+        row = np.full((self.v_max,), -1, np.int32)
+        row[:store.v_pad] = store.labels
+        labels[client] = row
+        self.labels = jnp.asarray(labels)
+        nv = np.array(self.nv)
+        nv[client] = max(int((row >= 0).sum()), 1)
+        self.nv = jnp.asarray(nv)
+        acc = np.array(self.acc)
+        acc[client] = _zero_row_acc(row)
+        self.acc = jnp.asarray(acc)
+        self._dirty[client].update(range(self.capacity))
+
     # ---- incremental flush --------------------------------------------
     def _drain(self):
         """Per-client sorted dirty-slot groups (advancing OUR cursor over

@@ -163,6 +163,21 @@ class SelectionEngine:
             fresh[c] = res
         return fresh
 
+    def refresh_validation(self, c: int, x_val, y_val, preds) -> None:
+        """Serving-time drift refresh (DESIGN.md §14): swap client c's
+        validation set in place and keep the device mirror coherent —
+        the label row re-uploads and every slot goes dirty, so the next
+        flush rebuilds the cached acc/S statistics against the shifted
+        world. The client's cached selection result is intentionally
+        KEPT: the resident ensemble keeps serving (that staleness is
+        exactly what the serving monitor measures) until a re-selection
+        replaces it."""
+        store = self.stores[c]
+        self._check_width(store)
+        store.refresh_validation(x_val, y_val, preds)
+        if self.device is not None:
+            self.device.refresh_labels(c)
+
     # ---- serving ------------------------------------------------------
     @staticmethod
     def _stale(store, res, chrom: np.ndarray) -> bool:

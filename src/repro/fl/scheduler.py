@@ -120,7 +120,7 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                    on_select_batch: Optional[Callable] = None,
                    transport=None, gossip=None, churn=None,
                    repair=None, faults=None, on_crash=None,
-                   obs=None) -> AsyncTrace:
+                   serving=None, obs=None) -> AsyncTrace:
     """train_cost(client, local_idx) -> virtual duration of that training.
     on_add(client, model_key, t) — a model (own or peer) entered the
       client's bench; the engine uses this to incrementally materialize
@@ -143,6 +143,14 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     on_crash(client, t) — driver hook fired when a crash event wipes a
       client's bench (the driver wipes its prediction store and any
       admission-gate state in the same instant).
+    serving — optional repro.serve.ServingEngine: seeds the heap with
+      "query"/"drift" events (every micro-batch precomputed from the
+      serve seed), answers each query batch from the client's current
+      ensemble, and — when its accuracy monitor breaches — requests a
+      re-selection through the standard debounced select grid. Offline
+      clients (churn or crash) drop their query batches. Every
+      consultation is behind `serving is not None`, so a serve-free run
+      is byte-identical to one without the parameter.
     obs — optional repro.obs.Obs: when given and enabled, the loop feeds
       the metrics registry (coverage gauge, select-batch width, select
       wall time) and — if `obs.trace` is set — the per-event Perfetto
@@ -267,6 +275,9 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
     if faults is not None:
         for ft, fkind, fc, fpay in faults.initial_events():
             push(ft, fkind, fc, fpay)
+    if serving is not None:
+        for st, skind, sc, spay in serving.initial_events():
+            push(st, skind, sc, spay)
 
     while q:
         t, _, kind, c, payload, src = heapq.heappop(q)
@@ -489,6 +500,22 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                 for a, b in repair.edges:
                     if faults.crosses_cut(a, b) and repair.rearm(a, b):
                         push(t + repair.cfg.interval, "digest_send", a, b)
+        elif kind == "query":
+            b_idx, nq = payload
+            away = (churn is not None and not churn.is_online(c, t)) \
+                or (faults is not None and not faults.is_online(c, t))
+            if tc is not None:
+                tc.slice(c, ("query lost" if away else "query")
+                         + f" x{nq}", t, t, cat="serve")
+            if away:
+                serving.note_dropped(c, nq)
+                continue
+            if serving.on_query(c, t, b_idx, nq) and want_select:
+                schedule_select(c, t)
+        elif kind == "drift":
+            # payload is the drift component index; the engine shifts its
+            # affected clients' query streams and validation state
+            serving.on_drift(payload, t)
         elif kind == "select":
             pending_select.discard(c)
             ready = [c]
@@ -516,6 +543,8 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                         ready, {b: sorted(bench[b]) for b in ready}, t) or {}
                 for b in ready:
                     record_selection(b, t, accs.get(b))
+                if serving is not None:
+                    serving.note_selected(ready, t)
             elif on_select is not None:
                 if tc is not None:
                     tc.slice(c, "select x1", t, t, cat="select",
@@ -523,6 +552,8 @@ def simulate_async(cfg: AsyncConfig, neighbors, train_cost: Callable,
                 with sw_select(t=t):
                     acc = on_select(c, sorted(bench[c]), t)
                 record_selection(c, t, acc)
+                if serving is not None:
+                    serving.note_selected([c], t)
 
     if transport is not None or gossip is not None or churn is not None \
             or faults is not None:

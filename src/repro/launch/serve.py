@@ -1,5 +1,6 @@
 """Serving driver: batched prefill + decode, single-model or FedPAE
-k-ensemble (logit-mean vote — the paper's inference path at LLM scale).
+k-ensemble (weighted mean of per-model softmax probabilities — the
+paper's soft-vote inference path at LLM scale).
 """
 from __future__ import annotations
 
@@ -28,23 +29,23 @@ def serve_batch(cfg, params_list, prompts, gen_len: int = 16,
     w = np.ones(len(params_list)) if weights is None else np.asarray(weights)
     w = w / w.sum()
 
-    caches, logit_sum = [], 0.0
+    caches, prob_sum = [], 0.0
     for wi, params in zip(w, params_list):
         logits, cache = prefill(params, prompts)
         caches.append(cache)
-        logit_sum = logit_sum + wi * jax.nn.softmax(
+        prob_sum = prob_sum + wi * jax.nn.softmax(
             logits[:, -1].astype(jnp.float32), axis=-1)
     out = []
-    tok = jnp.argmax(logit_sum, axis=-1)[:, None].astype(jnp.int32)
+    tok = jnp.argmax(prob_sum, axis=-1)[:, None].astype(jnp.int32)
     out.append(tok)
     for g in range(1, gen_len):
         pos = jnp.int32(S + g - 1)
-        logit_sum = 0.0
+        prob_sum = 0.0
         for i, (wi, params) in enumerate(zip(w, params_list)):
             logits, caches[i] = decode(params, tok, caches[i], pos)
-            logit_sum = logit_sum + wi * jax.nn.softmax(
+            prob_sum = prob_sum + wi * jax.nn.softmax(
                 logits[:, -1].astype(jnp.float32), axis=-1)
-        tok = jnp.argmax(logit_sum, axis=-1)[:, None].astype(jnp.int32)
+        tok = jnp.argmax(prob_sum, axis=-1)[:, None].astype(jnp.int32)
         out.append(tok)
     return jnp.concatenate(out, axis=1)
 

@@ -145,6 +145,16 @@ def emit_run_counters(mx: Metrics, net: Optional[dict],
             mx.inc("admission.models", ad["n_rejected"],
                    outcome="rejected")
             mx.inc("admission.invalidated", ad["n_invalidated"])
+        sv = net.get("serve")
+        if sv is not None:
+            mx.inc("serve.queries", sv["n_queries"], outcome="served")
+            mx.inc("serve.queries", sv["n_dropped"], outcome="dropped")
+            mx.inc("serve.reselections", sv["n_reselections"])
+            mx.inc("serve.drift_events", sv["n_drift_events"])
+            mx.set("serve.regret", sv["regret"])
+            if sv["latency_p50"] is not None:
+                mx.set("serve.latency_s", sv["latency_p50"], q="p50")
+                mx.set("serve.latency_s", sv["latency_p99"], q="p99")
     if coverage is not None:
         mx.set("coverage.fraction", float(coverage))
         # NaN (never reached full coverage) stays NaN in the frame and

@@ -18,11 +18,11 @@ from repro.sim.experiment import Experiment, RunResult
 from repro.sim.registry import known, register, resolve
 from repro.sim.spec import (ComponentSpec, DataSpec, ExperimentSpec,
                             FaultSpec, NetworkSpec, ObsSpec, ScheduleSpec,
-                            SelectionSpec, TrainSpec)
+                            SelectionSpec, ServeSpec, TrainSpec)
 
 __all__ = [
     "ComponentSpec", "DataSpec", "Experiment", "ExperimentSpec",
     "FaultSpec", "NetworkSpec", "ObsSpec", "RunResult", "ScheduleSpec",
-    "SelectionSpec", "TrainSpec", "fedpae_config", "known", "register",
-    "resolve", "spec_from_fedpae",
+    "SelectionSpec", "ServeSpec", "TrainSpec", "fedpae_config", "known",
+    "register", "resolve", "spec_from_fedpae",
 ]

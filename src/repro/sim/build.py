@@ -197,6 +197,60 @@ def build_faults(spec: ExperimentSpec, n_clients: int):
     return FaultController(injectors, n_clients)
 
 
+# ---- serving: traffic + drift (DESIGN.md §14) -------------------------
+# Imported lazily like the fault injectors: repro.serve is dead weight
+# for any run without a serve section.
+
+
+@register("traffic", "poisson")
+def _traffic_poisson(params: dict, ctx: dict):
+    from repro.serve import PoissonTraffic
+    return PoissonTraffic.from_params(params, ctx["n_clients"])
+
+
+@register("traffic", "bursty")
+def _traffic_bursty(params: dict, ctx: dict):
+    from repro.serve import BurstyTraffic
+    return BurstyTraffic.from_params(params, ctx["n_clients"])
+
+
+@register("drift", "label_shift")
+def _drift_label_shift(params: dict, ctx: dict):
+    from repro.serve import LabelShiftDrift
+    return LabelShiftDrift.from_params(params, ctx["n_clients"])
+
+
+@register("drift", "covariate_shift")
+def _drift_covariate_shift(params: dict, ctx: dict):
+    from repro.serve import CovariateShiftDrift
+    return CovariateShiftDrift.from_params(params, ctx["n_clients"])
+
+
+def build_serving(spec: ExperimentSpec, n_clients: int, stores, engine,
+                  query_pools=None):
+    """Assemble the spec's serve section into one ServingEngine (None
+    when no traffic component is declared). `ServeSpec.seed` overrides
+    the experiment seed for the traffic/drift components whose params
+    omit one — the same seed-completeness contract as build_faults."""
+    sv = spec.serve
+    if sv.traffic is None:
+        return None
+    from repro.serve import ServeConfig, ServingEngine
+    base = sv.seed if sv.seed is not None else spec.seed
+    ctx = {"n_clients": n_clients, "seed": base, "spec": spec}
+    traffic = build_component("traffic", _seeded(sv.traffic, base), ctx)
+    drifts = [build_component("drift", _seeded(cs, base), ctx)
+              for cs in sv.drift]
+    cfg = ServeConfig(
+        policy=sv.policy, monitor=sv.monitor, window=sv.window,
+        threshold=sv.threshold, debounce=sv.debounce,
+        service_time=sv.service_time, des_k=sv.des_k,
+        des_neighbors=sv.des_neighbors, seed=base)
+    return ServingEngine(cfg, traffic, drifts, n_clients=n_clients,
+                         n_classes=spec.data.n_classes, stores=stores,
+                         engine=engine, query_pools=query_pools)
+
+
 # ---- observability sinks ------------------------------------------------
 # The builders live in repro.obs.probes (which must stay importable from
 # the p2p/core layers without touching repro.sim); registration happens

@@ -617,6 +617,8 @@ def run_compiled(exp, *, tick: Optional[float] = None,
     from repro.sim.experiment import RunResult
     spec = exp.spec
     data, sched = spec.data, spec.schedule
+    if getattr(exp, "serving", None) is not None:
+        exp.serving.array_params()  # always raises, naming the traffic
     if data.kind not in ("none", "prediction_world"):
         raise ValueError(
             f'the compiled backend supports data.kind "none" and '

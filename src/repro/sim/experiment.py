@@ -34,7 +34,7 @@ from repro.obs.metrics import json_ready
 from repro.obs.probes import attach_metrics, finalize_run, make_obs
 from repro.sim.build import (_seeded, build_client_datasets, build_faults,
                              build_network, build_prediction_world,
-                             build_world_stores)
+                             build_serving, build_world_stores)
 from repro.sim.compat import fedpae_config
 from repro.sim.spec import ExperimentSpec
 
@@ -128,6 +128,7 @@ class Experiment:
         self.train_cost = train_cost
         self.faults = None           # repro.faults.FaultController (or None)
         self.admission = None        # repro.faults.AdmissionController
+        self.serving = None          # repro.serve.ServingEngine (or None)
         self.obs = None              # repro.obs.Obs once built (or None)
         self._sinks: list = []
         self._injected = {"transport": transport, "gossip": gossip,
@@ -218,6 +219,12 @@ class Experiment:
                 "fault injection (and validation-gated admission) drives "
                 "the asynchronous event loop — switch to "
                 'schedule.mode="async" or drop spec.faults')
+        if sync and spec.serve.enabled:
+            raise ValueError(
+                'schedule.mode="sync" cannot honor the serve section: '
+                "query traffic interleaves with the asynchronous event "
+                'loop — switch to schedule.mode="async" or drop '
+                "spec.serve")
         if sync and data.kind not in _IMAGE_KINDS:
             raise ValueError(
                 f'schedule.mode="sync" needs image datasets '
@@ -303,11 +310,43 @@ class Experiment:
                     {"n_clients": data.n_clients, "seed": fseed,
                      "spec": spec})
                 self.admission = AdmissionController(adm_cfg, self.stores)
+            if spec.serve.enabled:
+                if self.stores is None:
+                    raise ValueError(
+                        "the serve section answers queries from "
+                        f"prediction stores, but data.kind={data.kind!r} "
+                        'builds none — use "prediction_world" or an '
+                        "image world")
+                if self.engine is None:
+                    raise ValueError(
+                        "the serve section needs selection.enabled=True: "
+                        "queries are answered from selected ensembles "
+                        "and the monitor triggers re-selection")
+                if spec.serve.monitor and \
+                        not spec.schedule.select_during_run:
+                    raise ValueError(
+                        "serve.monitor=True triggers re-selection "
+                        "through the in-run select grid, but "
+                        "schedule.select_during_run=False disables it — "
+                        "enable in-run selection or set "
+                        "serve.monitor=False")
+                if data.kind not in _IMAGE_KINDS and any(
+                        cs.name == "covariate_shift"
+                        for cs in spec.serve.drift):
+                    raise ValueError(
+                        "drift[covariate_shift] transforms real query "
+                        f"inputs, but data.kind={data.kind!r} has none "
+                        "— use label_shift or an image world")
+                pools = ([(d.x_te, d.y_te) for d in self.datasets]
+                         if data.kind in _IMAGE_KINDS else None)
+                self.serving = build_serving(spec, data.n_clients,
+                                             self.stores, self.engine,
+                                             query_pools=pools)
         if self.obs is not None:
             # repoint the instrumented subsystems' NULL_METRICS defaults
             # at the run's live registry
             attach_metrics(self.obs.metrics, self.transport, self.gossip,
-                           self.repair)
+                           self.repair, self.serving)
         if spec.obs.sinks:
             from repro.sim.registry import build as build_component
             ctx = {"obs": self.obs, "spec": spec,
@@ -493,10 +532,13 @@ class Experiment:
             on_add=on_add, on_select_batch=on_select_batch,
             transport=self.transport, gossip=self.gossip,
             churn=self.churn, repair=self.repair, faults=faults,
-            on_crash=on_crash_cb, obs=self.obs)
+            on_crash=on_crash_cb, serving=self.serving, obs=self.obs)
         if adm is not None:
             trace.net = dict(trace.net or {})
             trace.net["admission"] = adm.as_dict()
+        if self.serving is not None:
+            trace.net = dict(trace.net or {})
+            trace.net["serve"] = self.serving.stats_dict()
 
         finals = [s[-1][1] if s else 0
                   for s in trace.bench_sizes.values()]

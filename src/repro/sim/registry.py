@@ -24,7 +24,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Tuple
 
 KINDS = ("transport", "gossip", "churn", "repair", "train_cost", "sizer",
-         "backend", "sink", "fault", "admission")
+         "backend", "sink", "fault", "admission", "traffic", "drift")
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {k: {} for k in KINDS}
 

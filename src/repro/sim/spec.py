@@ -26,6 +26,14 @@ scenario. Five sections mirror the five things a run needs:
                    components (kind "fault") plus an optional
                    validation-gated admission layer (kind "admission");
                    empty by default with a byte-identical no-fault path.
+  ServeSpec      — online serving (DESIGN.md §14): a tagged query-traffic
+                   component (kind "traffic") interleaving per-client
+                   query micro-batches with train/gossip/repair events,
+                   tagged drift components (kind "drift") shifting the
+                   query stream at scheduled virtual times, and an
+                   accuracy monitor whose window-threshold breach
+                   triggers debounced re-selection; empty by default
+                   with a byte-identical no-serving path.
 
 Seed-completeness: `ExperimentSpec.seed` is the ONE knob; every section
 and component whose params omit a `seed` inherits it at build time, so
@@ -258,6 +266,61 @@ class FaultSpec:
 
 
 @dataclasses.dataclass
+class ServeSpec:
+    """Online serving (DESIGN.md §14). Empty by default — a spec without
+    (or with an empty) `serve` section takes the scheduler's
+    no-serving paths byte-identically.
+
+    `traffic` names a kind-"traffic" component ("poisson", "bursty")
+    generating per-client query micro-batch events the scheduler
+    interleaves with train/gossip/repair; `drift` are kind-"drift"
+    components ("label_shift", "covariate_shift" — at most one of each)
+    shifting the query stream and the serving ground truth at scheduled
+    virtual times. `policy` picks how a batch is answered: "ensemble"
+    serves the client's currently-selected chromosome via the mean-prob
+    vote, "dynamic" routes through the KNORA-style DES in
+    `core.dynamic` (competence-weighted per-query model choice).
+    When `monitor` is true, a sliding window of `window` per-query
+    correct bits is kept per client; once warm, dropping more than
+    `threshold` below the window's own peak schedules a re-selection,
+    debounced to at most one per `debounce` virtual seconds per client.
+    `service_time` prices one query's compute for the virtual-time
+    latency model. `seed` defaults to the experiment seed (traffic and
+    drift schedules are pure functions of it). Serving drives the
+    asynchronous event loop: sync runs and the compiled backend reject
+    it loudly."""
+    POLICIES: ClassVar[Tuple[str, ...]] = ("ensemble", "dynamic")
+
+    traffic: Optional[ComponentSpec] = None
+    drift: tuple = ()
+    policy: str = "ensemble"
+    monitor: bool = True
+    window: int = 64
+    threshold: float = 0.1
+    debounce: float = 1.0
+    service_time: float = 1e-4
+    des_k: Optional[int] = None           # None -> selection.k
+    des_neighbors: int = 7                # KNORA competence region size
+    seed: Optional[int] = None            # None -> ExperimentSpec.seed
+
+    def __post_init__(self):
+        if self.policy not in self.POLICIES:
+            raise ValueError(f"unknown serve policy {self.policy!r}; "
+                             f"choose from {self.POLICIES}")
+        self.traffic = ComponentSpec.of(self.traffic, "serve.traffic")
+        self.drift = tuple(ComponentSpec.of(d, "serve.drift")
+                           for d in self.drift)
+        if self.drift and self.traffic is None:
+            raise ValueError("serve.drift without serve.traffic: drift "
+                             "shifts the query stream, so a traffic "
+                             "component must be configured")
+
+    @property
+    def enabled(self) -> bool:
+        return self.traffic is not None
+
+
+@dataclasses.dataclass
 class ExperimentSpec:
     """The one declarative description of a run. Build and execute it
     with `repro.sim.Experiment.from_spec(spec).run()`."""
@@ -269,6 +332,7 @@ class ExperimentSpec:
     schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
     seed: int = 0
 
     # ---- serialization ------------------------------------------------
@@ -286,7 +350,7 @@ class ExperimentSpec:
         sections = {"data": DataSpec, "train": TrainSpec,
                     "selection": SelectionSpec, "network": NetworkSpec,
                     "schedule": ScheduleSpec, "obs": ObsSpec,
-                    "faults": FaultSpec}
+                    "faults": FaultSpec, "serve": ServeSpec}
         kw = {}
         for name, scls in sections.items():
             sub = d.get(name)

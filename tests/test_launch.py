@@ -86,6 +86,25 @@ def test_serve_batch_single_and_ensemble():
     assert int(out1.max()) < cfg.vocab
 
 
+def test_serve_batch_weighted_decode_degenerate():
+    # weights=[1, 0] must reduce the soft-vote (weighted mean of per-model
+    # softmax probabilities) to the first model's own greedy decode.
+    from repro.launch.serve import serve_batch
+    cfg = get_smoke("llama3-8b")
+    key = jax.random.PRNGKey(1)
+    from repro.models import transformer as tf
+    params = [tf.init_params(cfg, jax.random.fold_in(key, i)) for i in range(2)]
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+    solo = serve_batch(cfg, params[:1], prompts, gen_len=4)
+    masked = serve_batch(cfg, params, prompts, gen_len=4,
+                         weights=[1.0, 0.0])
+    assert np.array_equal(np.asarray(solo), np.asarray(masked))
+    # non-degenerate weights follow the same path and stay well-formed
+    blended = serve_batch(cfg, params, prompts, gen_len=4,
+                          weights=[0.7, 0.3])
+    assert blended.shape == (2, 4) and int(blended.max()) < cfg.vocab
+
+
 def test_trainer_loss_decreases():
     from repro.launch.train import train
     _, losses, _ = train("qwen2.5-3b", "smoke", steps=25, batch=4, seq=64,
